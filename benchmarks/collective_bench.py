@@ -1,0 +1,43 @@
+"""FlooNoC-layer microbench: bucketing overhead, NoC-aware scheduler picks,
+and the ordering microbench as a transport-level summary."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core import collectives as coll
+from repro.core import scheduler as sched
+
+
+def bench(full: bool = False) -> list[dict]:
+    rows = []
+    # bucket pack/unpack throughput (1-device; pure data movement)
+    tree = {f"w{i}": jnp.ones((256, 256), jnp.float32) for i in range(12)}
+    plan = coll.plan_buckets(tree, 4)
+
+    @jax.jit
+    def roundtrip(t):
+        return coll.from_buckets(coll.to_buckets(t, plan), plan)
+
+    out, us = timed(roundtrip, tree, warmup=2, iters=5)
+    nbytes = sum(v.nbytes for v in jax.tree.leaves(tree))
+    rows.append(row("coll/bucket_roundtrip_GBps", us, round(nbytes / us / 1e3, 2)))
+    rows.append(row("coll/buckets_balanced", 0.0,
+                    int(max(plan.stream_sizes) == min(plan.stream_sizes)), target=1,
+                    rel_tol=0.01))
+
+    # scheduler behavior (model-level)
+    s1 = sched.suggest(10e9, data_shards=16, pods=1, compute_s=1.0)
+    s2 = sched.suggest(10e9, data_shards=16, pods=2, compute_s=1.0)
+    rows.append(row("coll/sched_streams_singlepod", 0.0, s1["n_streams"],
+                    target=2, cmp="ge"))
+    rows.append(row("coll/sched_compress_crosspod", 0.0, int(s2["compress_pod"]),
+                    target=1, rel_tol=0.01))
+    # without compression the scarce pod link dominates (the reason the
+    # scheduler turns compression on)
+    c_raw = sched.cost(int(10e9), n_streams=s2["n_streams"], data_shards=16,
+                       pods=2, compress_pod=False, compute_s=1.0)
+    rows.append(row("coll/sched_pod_cost_dominates_uncompressed", 0.0,
+                    int(c_raw.pod_s > c_raw.intra_s), target=1, rel_tol=0.01))
+    return rows

@@ -1,0 +1,28 @@
+"""Shared benchmark plumbing: timing + row construction + paper targets."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        out = fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt * 1e6  # us
+
+
+def row(name: str, us: float, derived, target=None, rel_tol: float = 0.15,
+        cmp: str = "approx") -> dict:
+    ok = None
+    if target is not None and isinstance(derived, (int, float)):
+        if cmp == "approx":
+            ok = abs(derived - target) <= rel_tol * abs(target)
+        elif cmp == "ge":
+            ok = derived >= target
+        elif cmp == "le":
+            ok = derived <= target
+    return {"name": name, "us_per_call": round(us, 1), "derived": derived,
+            "target": target, "ok": ok}

@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus target/ok columns) and a
+validation summary against the paper's published numbers.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger sweeps")
+    ap.add_argument("--only", default=None, help="substring filter on module name")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        collective_bench,
+        fig7_latency,
+        fig8_traffic,
+        fig9_area_power,
+        fig10_rob,
+        fig11_hbm,
+        table1_links,
+        table2_occamy,
+        table3_soa,
+    )
+
+    modules = [
+        ("table1_links", table1_links),
+        ("fig7_latency", fig7_latency),
+        ("fig8_traffic", fig8_traffic),
+        ("fig9_area_power", fig9_area_power),
+        ("fig10_rob", fig10_rob),
+        ("fig11_hbm", fig11_hbm),
+        ("table2_occamy", table2_occamy),
+        ("table3_soa", table3_soa),
+        ("collective_bench", collective_bench),
+    ]
+
+    print("name,us_per_call,derived,target,ok")
+    n_checked = n_ok = 0
+    failed = []
+    for name, mod in modules:
+        if args.only and args.only not in name:
+            continue
+        for r in mod.bench(full=args.full):
+            tgt = "" if r["target"] is None else r["target"]
+            ok = "" if r["ok"] is None else r["ok"]
+            print(f"{r['name']},{r['us_per_call']},{r['derived']},{tgt},{ok}", flush=True)
+            if r["ok"] is not None:
+                n_checked += 1
+                n_ok += bool(r["ok"])
+                if not r["ok"]:
+                    failed.append(r["name"])
+    print(f"\n# paper-validation: {n_ok}/{n_checked} targets matched", flush=True)
+    if failed:
+        print("# failed targets:", ", ".join(failed))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

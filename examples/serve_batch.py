@@ -1,0 +1,50 @@
+"""Serve a small model with batched requests: prefill + decode engine with
+KV caches (works across families: try --arch mamba2-130m / gemma3-4b /
+deepseek-v2-236b for SSM / sliding-window / MLA caches — reduced configs).
+
+Run:  PYTHONPATH=src python examples/serve_batch.py --arch gemma3-4b
+"""
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.data.pipeline import DataConfig
+from repro.serve import Engine, ServeConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b", choices=list_archs())
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    print(f"arch: {args.arch} (reduced: {cfg.n_layers}L d={cfg.d_model})")
+
+    # quick warm start so generations aren't pure noise
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4,
+                      modality=cfg.modality if cfg.family == "encdec" or cfg.modality == "vision" else "text",
+                      d_model=cfg.d_model, frontend_tokens=cfg.frontend_tokens)
+    trainer = Trainer(cfg, dcfg, TrainerConfig(steps=30, log_every=0))
+    params, _, hist = trainer.run(resume=False)
+    print(f"warm-start loss: {hist[-1]['loss']:.3f}")
+
+    eng = Engine(cfg, params, scfg=ServeConfig(
+        max_new_tokens=args.max_new, temperature=args.temperature))
+    requests = [[5, 6, 7, 8, 9], [1, 2, 3], [42, 43, 44, 45, 46, 47, 48]]
+    t0 = time.time()
+    outs = eng.generate(requests)
+    dt = time.time() - t0
+    n_tok = sum(len(o) for o in outs)
+    print(f"generated {n_tok} tokens for {len(requests)} requests "
+          f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile)")
+    for i, (req, out) in enumerate(zip(requests, outs)):
+        print(f"  request {i}: {req} -> {out}")
+
+
+if __name__ == "__main__":
+    main()

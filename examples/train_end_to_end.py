@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~100M-param dense LM for a few hundred steps
+with checkpointing, fault tolerance, and the FlooNoC multi-stream gradient
+sync (explicit-DDP mode when multiple devices are available).
+
+Run:  PYTHONPATH=src python examples/train_end_to_end.py [--steps 300]
+Multi-device (8 fake CPU devices):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/train_end_to_end.py --mode ddp
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import ModelConfig, register
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.train.fault_tolerance import Supervisor
+from repro.train.trainer import Trainer, TrainerConfig
+
+# ~100M params: 12L x 768 (GPT2-small-ish) with a llama-style block
+CONFIG_100M = register(ModelConfig(
+    name="demo-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=32_768,
+    rope_theta=10_000.0,
+    source="examples/train_end_to_end.py",
+))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--mode", default="gspmd", choices=["gspmd", "ddp"])
+    ap.add_argument("--ckpt-dir", default="/tmp/floo_demo_ckpt")
+    args = ap.parse_args()
+
+    print(f"devices: {jax.device_count()}  mode: {args.mode}")
+    cfg = CONFIG_100M
+    from repro.models.model import count_params
+
+    print(f"params: {count_params(cfg)/1e6:.1f}M")
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    tcfg = TrainerConfig(
+        steps=args.steps, log_every=20, ckpt_every=50, ckpt_dir=args.ckpt_dir,
+        mode=args.mode,
+        opt=AdamWConfig(lr=6e-4, warmup_steps=50, total_steps=args.steps),
+    )
+
+    def attempt():
+        trainer = Trainer(cfg, dcfg, tcfg)
+        return trainer.run(resume=True)
+
+    # supervised: crashes restore the latest checkpoint and continue
+    sup = Supervisor(max_restarts=3)
+    params, opt, hist = sup.run(attempt, recover=lambda n: print(f"restart #{n}"))
+    print(f"done: {len(hist)} steps this run, "
+          f"final loss {hist[-1]['loss']:.4f}" if hist else "resumed-complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Sharded, manifest-driven, atomically-published checkpoints with async save
+and mesh-shape-independent restore (elastic rescale).
+
+Layout:  <dir>/step_<n>/manifest.json + arrays_<proc>.npz
+  * manifest: flat key -> {shape, dtype}; step; user metadata
+  * each process saves its addressable shards (single-process CI saves all)
+  * publish is atomic (write to .tmp, os.replace)
+  * restore loads global arrays and device_puts them with the *target*
+    shardings — the target mesh may differ from the save mesh (elastic).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_NATIVE = {np.dtype(t) for t in ("f2", "f4", "f8", "i1", "i2", "i4", "i8",
+                                 "u1", "u2", "u4", "u8", "b1", "c8", "c16")}
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode(a: np.ndarray) -> np.ndarray:
+    """npz can't store ml_dtypes (bf16, fp8); ship raw bytes instead."""
+    if a.dtype in _NATIVE:
+        return a
+    return np.frombuffer(a.tobytes(), np.uint8)
+
+
+def _decode(a: np.ndarray, shape, dtype_name: str) -> np.ndarray:
+    dt = _np_dtype(dtype_name)
+    if a.dtype == np.uint8 and dt != np.uint8:
+        return np.frombuffer(a.tobytes(), dt).reshape(shape)
+    return a
+
+
+def _flatten(tree) -> dict[str, jax.Array]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): leaf for path, leaf in leaves}
+
+
+def latest_step(directory: str | Path) -> int | None:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in d.glob("step_*") if p.is_dir()
+             and not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, *, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------ save
+    def save(self, step: int, tree, metadata: dict | None = None, block: bool = False):
+        flat = _flatten(tree)
+        # materialize on host *now* (so training can mutate donated buffers)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        meta = {
+            "step": step,
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+            "metadata": metadata or {},
+        }
+        if self.async_save and not block:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, meta), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host, meta)
+
+    def _write(self, step: int, host: dict, meta: dict):
+        tmp = self.dir / f"step_{step}.tmp"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        proc = jax.process_index()
+        np.savez(tmp / f"arrays_{proc}.npz", **{k: _encode(v) for k, v in host.items()})
+        (tmp / "manifest.json").write_text(json.dumps(meta))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.dir.glob("step_*") if p.is_dir()
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # --------------------------------------------------------- restore
+    def restore(self, step: int, like_tree, shardings=None):
+        """Restore into the structure of ``like_tree``; ``shardings`` (same
+        structure) places shards on the *current* mesh — which may differ
+        from the mesh at save time (elastic rescale)."""
+        d = self.dir / f"step_{step}"
+        meta = json.loads((d / "manifest.json").read_text())
+        arrays: dict[str, np.ndarray] = {}
+        for f in sorted(d.glob("arrays_*.npz")):
+            with np.load(f) as z:
+                arrays.update({k: z[k] for k in z.files})
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+        sh_leaves = (jax.tree.leaves(shardings) if shardings is not None
+                     else [None] * len(paths))
+        out = []
+        for (path, like), sh in zip(paths, sh_leaves):
+            key = jax.tree_util.keystr(path)
+            if key not in arrays:
+                raise KeyError(f"checkpoint missing {key}")
+            am = meta["arrays"][key]
+            a = _decode(arrays[key], tuple(am["shape"]), am["dtype"])
+            if tuple(a.shape) != tuple(like.shape):
+                raise ValueError(f"{key}: saved {a.shape} != expected {like.shape}")
+            a = a.astype(like.dtype)
+            out.append(jax.device_put(a, sh) if sh is not None else jax.device_put(a))
+        return jax.tree_util.tree_unflatten(treedef, out)

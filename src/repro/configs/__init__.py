@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    REGISTRY,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    list_archs,
+    register,
+    shape_applicable,
+)
+
+__all__ = [
+    "REGISTRY",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "get_config",
+    "list_archs",
+    "register",
+    "shape_applicable",
+]

@@ -1,0 +1,187 @@
+"""FlooNoC-inspired collective layer (DESIGN.md Sec. 2b).
+
+Paper principle -> TPU/JAX mechanism:
+  * wide single-flit packets   -> bucket fusion (few wide fused collectives)
+  * multi-stream DMA           -> n independent gradient streams, no
+                                  cross-stream ordering (unique "TxnID")
+  * physical channel separation-> `narrow_sync` for scalars rides separate,
+                                  dependency-free collectives
+  * XY dimension-ordered routes-> axis-by-axis collective decomposition
+  * C2C boundary link          -> inter-pod compression with error feedback
+
+These run *inside* shard_map (explicit-DDP training or the cross-pod stage of
+hybrid training). Everything is pure jnp + lax collectives.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# Bucketing: pack a pytree into n_streams flat f32 buckets (wide flits)
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class BucketPlan:
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    sizes: tuple
+    stream_of_leaf: tuple  # stream index per leaf
+    offsets: tuple  # offset within its stream bucket
+    stream_sizes: tuple
+
+    @property
+    def n_streams(self) -> int:
+        return len(self.stream_sizes)
+
+
+def plan_buckets(tree, n_streams: int) -> BucketPlan:
+    """Greedy size-balanced assignment of leaves to streams (bin packing)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    sizes = [int(np.prod(l.shape)) if l.shape else 1 for l in leaves]
+    order = sorted(range(len(leaves)), key=lambda i: -sizes[i])
+    loads = [0] * n_streams
+    stream_of_leaf = [0] * len(leaves)
+    for i in order:
+        s = loads.index(min(loads))
+        stream_of_leaf[i] = s
+        loads[s] += sizes[i]
+    offsets = [0] * len(leaves)
+    fill = [0] * n_streams
+    for i, l in enumerate(leaves):
+        s = stream_of_leaf[i]
+        offsets[i] = fill[s]
+        fill[s] += sizes[i]
+    return BucketPlan(
+        treedef=treedef,
+        shapes=tuple(l.shape for l in leaves),
+        dtypes=tuple(l.dtype for l in leaves),
+        sizes=tuple(sizes),
+        stream_of_leaf=tuple(stream_of_leaf),
+        offsets=tuple(offsets),
+        stream_sizes=tuple(max(f, 1) for f in fill),
+    )
+
+
+def to_buckets(tree, plan: BucketPlan, dtype=jnp.float32) -> list:
+    leaves = jax.tree.leaves(tree)
+    buckets = [jnp.zeros((n,), dtype) for n in plan.stream_sizes]
+    for i, l in enumerate(leaves):
+        s, off = plan.stream_of_leaf[i], plan.offsets[i]
+        buckets[s] = jax.lax.dynamic_update_slice(
+            buckets[s], l.reshape(-1).astype(dtype), (off,)
+        )
+    return buckets
+
+
+def from_buckets(buckets: list, plan: BucketPlan):
+    leaves = []
+    for i, (shape, dt) in enumerate(zip(plan.shapes, plan.dtypes)):
+        s, off, n = plan.stream_of_leaf[i], plan.offsets[i], plan.sizes[i]
+        flat = jax.lax.dynamic_slice(buckets[s], (off,), (n,))
+        leaves.append(flat.reshape(shape).astype(dt))
+    return jax.tree.unflatten(plan.treedef, leaves)
+
+
+# ----------------------------------------------------------------------
+# Dimension-ordered reduction (XY routing analogue)
+# ----------------------------------------------------------------------
+def dim_ordered_psum(x, axes: tuple[str, ...]):
+    """psum decomposed axis-by-axis in a fixed (static-route) order."""
+    for a in axes:
+        x = jax.lax.psum(x, a)
+    return x
+
+
+def dim_ordered_pmean(x, axes: tuple[str, ...]):
+    x = dim_ordered_psum(x, axes)
+    n = 1
+    for a in axes:
+        n *= jax.lax.axis_size(a)
+    return x / n
+
+
+# ----------------------------------------------------------------------
+# Inter-pod compression with error feedback (the C2C link is scarce)
+# ----------------------------------------------------------------------
+def compressed_psum_int8(x, axis: str, ef_state=None):
+    """int8-quantized psum over `axis` with error feedback.
+
+    Scale is agreed across the group (pmax), accumulation is int32 (exact),
+    so the only error is local quantization — which error feedback carries
+    into the next step. Returns (result_f32, new_ef_state)."""
+    xf = x.astype(jnp.float32)
+    if ef_state is not None:
+        xf = xf + ef_state
+    scale = jnp.maximum(jax.lax.pmax(jnp.max(jnp.abs(xf)), axis), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127)
+    err = xf - q * scale
+    total = jax.lax.psum(q.astype(jnp.int32), axis).astype(jnp.float32) * scale
+    return total, err
+
+
+# ----------------------------------------------------------------------
+# Multi-stream gradient sync (the paper's multi-stream DMA, end-to-end)
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class SyncConfig:
+    n_streams: int = 4
+    intra_axes: tuple = ("data",)  # wide on-pod fabric
+    pod_axis: str | None = None  # cross-pod (C2C) stage; None = single-pod
+    compress_pod: bool = False  # int8 + error feedback across pods
+    mean: bool = True
+
+
+def multi_stream_sync(grads, cfg: SyncConfig, plan: BucketPlan | None = None,
+                      ef_state: list | None = None):
+    """Synchronize a gradient pytree inside shard_map.
+
+    Streams are independent (no cross-stream data dependency -> XLA can
+    overlap them with each other and with backward compute). Within a stream
+    the reduction is dimension-ordered: intra-pod first (wide ICI), then the
+    pod axis (narrow C2C), optionally compressed.
+
+    Returns (synced_grads, new_ef_state).
+    """
+    plan = plan or plan_buckets(grads, cfg.n_streams)
+    buckets = to_buckets(grads, plan)
+    n_members = 1
+    for a in cfg.intra_axes:
+        n_members *= jax.lax.axis_size(a)
+    if cfg.pod_axis is not None:
+        n_members *= jax.lax.axis_size(cfg.pod_axis)
+
+    new_ef = []
+    out = []
+    for s, b in enumerate(buckets):
+        b = dim_ordered_psum(b, cfg.intra_axes)
+        if cfg.pod_axis is not None:
+            if cfg.compress_pod:
+                ef = None if ef_state is None else ef_state[s]
+                b, ef_new = compressed_psum_int8(b, cfg.pod_axis, ef)
+                new_ef.append(ef_new)
+            else:
+                b = jax.lax.psum(b, cfg.pod_axis)
+        if cfg.mean:
+            b = b / n_members
+        out.append(b)
+    synced = from_buckets(out, plan)
+    return synced, (new_ef if new_ef else None)
+
+
+# ----------------------------------------------------------------------
+# Narrow channel: latency-critical scalars (loss, grad-norm, router stats)
+# ----------------------------------------------------------------------
+def narrow_sync(scalars: dict, axes: tuple[str, ...]) -> dict:
+    """Small metrics ride their own collective with no data dependency on the
+    wide gradient path (physical channel separation)."""
+    stacked = jnp.stack([jnp.asarray(v, jnp.float32) for v in scalars.values()])
+    summed = dim_ordered_pmean(stacked, axes)
+    return {k: summed[i] for i, k in enumerate(scalars)}

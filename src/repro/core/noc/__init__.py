@@ -1,0 +1,4 @@
+from repro.core.noc.params import NocParams
+from repro.core.noc.topology import Topology, build_mesh, build_occamy
+
+__all__ = ["NocParams", "Topology", "build_mesh", "build_occamy"]

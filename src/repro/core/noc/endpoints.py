@@ -1,0 +1,223 @@
+"""Endpoint models: compute-tile cluster (narrow cores + multi-stream DMA +
+SPM) and HBM channels, with the paper's Network-Interface ordering schemes.
+
+NI ordering (paper Sec. III-A):
+  * RoB-less: per TxnID outstanding counter + last destination; a new request
+    stalls while the TxnID has outstanding transactions to a *different*
+    destination (static routing makes same-destination responses in-order).
+  * RoB: end-to-end flow control on reorder-buffer credits; out-of-order
+    responses to different destinations allowed (buffered + reordered).
+
+The multi-stream DMA (paper Sec. IV-A) gives each backend its own TxnID, so
+RoB-less ordering never stalls across streams — the paper's key end-to-end
+insight.
+
+Everything is vectorized over endpoints (jnp arrays, no per-endpoint python).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.noc.engine import FLIT_FIELDS, empty_flits
+from repro.core.noc.params import (
+    CH_REQ,
+    CH_RSP,
+    CH_WIDE,
+    NARROW_REQ,
+    NARROW_RSP,
+    WIDE_AR,
+    WIDE_AW_W,
+    WIDE_B,
+    WIDE_R,
+    NocParams,
+)
+
+
+@dataclass(frozen=True)
+class Workload:
+    """Static per-endpoint traffic programme (numpy, baked into the sim)."""
+
+    narrow_rate: np.ndarray  # [E] f32 requests/cycle (0 = off)
+    narrow_dst: np.ndarray  # [E] int32 (-1 off, -2 uniform-random per msg)
+    dma_dst: np.ndarray  # [E, C] int32 destination per stream (-1 off, -2 uniform)
+    dma_alt_dst: np.ndarray  # [E, C] int32 alternate per-odd-txn dst (-1 = none)
+    dma_txns: np.ndarray  # [E, C] transfers per stream
+    dma_beats: int  # wide beats per transfer (4 kB = 64)
+    dma_write: bool  # False = reads, True = writes
+    n_tiles: int
+    unique_txn_per_stream: bool = True  # multi-stream DMA (unique TxnIDs)
+
+    @property
+    def n_streams(self) -> int:
+        return self.dma_dst.shape[1]
+
+
+def idle_workload(E: int, n_tiles: int, streams: int = 1) -> Workload:
+    z = np.zeros((E,), np.float32)
+    m1 = np.full((E,), -1, np.int32)
+    return Workload(
+        narrow_rate=z, narrow_dst=m1,
+        dma_dst=np.full((E, streams), -1, np.int32),
+        dma_alt_dst=np.full((E, streams), -1, np.int32),
+        dma_txns=np.zeros((E, streams), np.int32),
+        dma_beats=64, dma_write=False, n_tiles=n_tiles,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class EndpointState:
+    # NI ordering
+    ni_cnt: jnp.ndarray  # [E, T] outstanding per TxnID
+    ni_dst: jnp.ndarray  # [E, T] destination of outstanding txns (-1)
+    rob_credit: jnp.ndarray  # [E] beats of RoB space left (rob mode)
+    # narrow generator
+    n_acc: jnp.ndarray  # [E] f32 token bucket
+    n_seq: jnp.ndarray  # [E]
+    # DMA streams
+    d_txns_left: jnp.ndarray  # [E, C]
+    d_outst: jnp.ndarray  # [E, C] outstanding transfers
+    d_seq: jnp.ndarray  # [E, C] issue index
+    d_beats_got: jnp.ndarray  # [E, C] read beats received (stats)
+    # write burst serializer (one active burst per endpoint)
+    w_stream: jnp.ndarray  # [E] active stream (-1)
+    w_left: jnp.ndarray  # [E] beats left
+    w_dst: jnp.ndarray  # [E]
+    w_txn: jnp.ndarray  # [E]
+    w_ts: jnp.ndarray  # [E]
+    # target-side: write burst reassembly counter (wormhole guarantees no
+    # interleave, so one counter per endpoint suffices)
+    t_aww_left: jnp.ndarray  # [E]
+    t_aww_src: jnp.ndarray  # [E]
+    t_aww_txn: jnp.ndarray  # [E]
+    # memory request queue + server
+    mq: dict  # fields [E, Q]
+    mq_cnt: jnp.ndarray  # [E]
+    m_busy: jnp.ndarray  # [E] service countdown
+    m_beats: jnp.ndarray  # [E] beats left of current response
+    m_flit: dict  # current response template fields [E]
+    m_active: jnp.ndarray  # [E] bool
+    hbm_tok: jnp.ndarray  # [E] f32
+    # egress queues (per channel): fields + ready time
+    eg: dict  # fields [3, E, Q]
+    eg_ready: jnp.ndarray  # [3, E, Q]
+    eg_cnt: jnp.ndarray  # [3, E]
+    # stats
+    lat_sum: jnp.ndarray  # [E] f32 narrow round-trip latency
+    lat_cnt: jnp.ndarray  # [E]
+    beats_rcvd: jnp.ndarray  # [E] wide payload beats received (reads at src / writes at dst)
+    beats_sent: jnp.ndarray  # [E]
+    ni_stall: jnp.ndarray  # [E] cycles a ready request was stalled by ordering
+    hbm_served: jnp.ndarray  # [E] beats served by this endpoint's memory
+    n_sent: jnp.ndarray  # [E]
+    d_done: jnp.ndarray  # [E, C] transfers fully completed
+    last_rx: jnp.ndarray  # [E] cycle of the most recent payload beat received
+    first_rx: jnp.ndarray  # [E] cycle of the first payload beat (-1)
+
+
+MQ_FIELDS = ("src", "txn", "beats", "kind", "ts")
+
+
+def init_endpoints(E: int, params: NocParams, streams: int) -> EndpointState:
+    T, Q = params.n_txn_ids, params.memq_depth
+    EQ = params.egress_depth
+    z = lambda *s: jnp.zeros(s, jnp.int32)
+    return EndpointState(
+        ni_cnt=z(E, T), ni_dst=jnp.full((E, T), -1, jnp.int32),
+        rob_credit=jnp.full((E,), params.rob_beats, jnp.int32),
+        n_acc=jnp.zeros((E,), jnp.float32), n_seq=z(E),
+        d_txns_left=z(E, streams), d_outst=z(E, streams), d_seq=z(E, streams),
+        d_beats_got=z(E, streams),
+        w_stream=jnp.full((E,), -1, jnp.int32), w_left=z(E), w_dst=z(E),
+        w_txn=z(E), w_ts=z(E),
+        t_aww_left=z(E), t_aww_src=z(E), t_aww_txn=z(E),
+        mq={f: z(E, Q) for f in MQ_FIELDS}, mq_cnt=z(E),
+        m_busy=z(E), m_beats=z(E), m_flit=empty_flits((E,)),
+        m_active=jnp.zeros((E,), bool),
+        hbm_tok=jnp.zeros((E,), jnp.float32),
+        eg={f: z(3, E, EQ) for f in FLIT_FIELDS}, eg_ready=z(3, E, EQ),
+        eg_cnt=z(3, E),
+        lat_sum=jnp.zeros((E,), jnp.float32), lat_cnt=z(E),
+        beats_rcvd=z(E), beats_sent=z(E), ni_stall=z(E), hbm_served=z(E),
+        n_sent=z(E), d_done=z(E, streams),
+        last_rx=z(E), first_rx=jnp.full((E,), -1, jnp.int32),
+    )
+
+
+def _hash(a, b, c):
+    u = jnp.uint32
+    a = jnp.asarray(a).astype(u)
+    b = jnp.asarray(b).astype(u)
+    c = jnp.asarray(c).astype(u)
+    h = a * u(2654435761) + b * u(40503) + c * u(69069) + u(12345)
+    h = (h ^ (h >> u(13))) * u(1274126177)
+    h = h ^ (h >> u(16))
+    return (h & u(0x7FFFFFFF)).astype(jnp.int32)
+
+
+def _mq_push(st: EndpointState, mask, src, txn, beats, kind, ts):
+    Q = st.mq["src"].shape[1]
+    idx = jnp.clip(st.mq_cnt, 0, Q - 1)
+    onehot = jax.nn.one_hot(idx, Q, dtype=jnp.bool_) & mask[:, None]
+    kind_arr = jnp.broadcast_to(jnp.asarray(kind, jnp.int32), mask.shape)
+    beats_arr = jnp.broadcast_to(jnp.asarray(beats, jnp.int32), mask.shape)
+    vals = {"src": src, "txn": txn, "beats": beats_arr, "kind": kind_arr, "ts": ts}
+    mq = {f: jnp.where(onehot, vals[f][:, None], st.mq[f]) for f in MQ_FIELDS}
+    return mq, st.mq_cnt + mask.astype(jnp.int32)
+
+
+def _eg_push(eg, eg_ready, eg_cnt, ch: int, mask, flit: dict, ready):
+    Q = eg_ready.shape[-1]
+    idx = jnp.clip(eg_cnt[ch], 0, Q - 1)
+    onehot = jax.nn.one_hot(idx, Q, dtype=jnp.bool_) & mask[:, None]
+    eg = {
+        f: eg[f].at[ch].set(jnp.where(onehot, flit[f][:, None], eg[f][ch]))
+        for f in FLIT_FIELDS
+    }
+    eg_ready = eg_ready.at[ch].set(jnp.where(onehot, ready[:, None], eg_ready[ch]))
+    return eg, eg_ready, eg_cnt.at[ch].add(mask.astype(jnp.int32))
+
+
+def _eg_pop(eg, eg_ready, eg_cnt, ch: int, mask):
+    eg = {
+        f: eg[f].at[ch].set(
+            jnp.where(mask[:, None], jnp.roll(eg[f][ch], -1, axis=-1), eg[f][ch])
+        )
+        for f in FLIT_FIELDS
+    }
+    eg_ready = eg_ready.at[ch].set(
+        jnp.where(mask[:, None], jnp.roll(eg_ready[ch], -1, axis=-1), eg_ready[ch])
+    )
+    return eg, eg_ready, eg_cnt.at[ch].add(-mask.astype(jnp.int32))
+
+
+def _ni_check(st: EndpointState, txn, dst, params: NocParams, beats):
+    """RoB-less / RoB admission check. txn, dst, beats: [E]."""
+    E = txn.shape[0]
+    eidx = jnp.arange(E)
+    cnt = st.ni_cnt[eidx, txn]
+    last = st.ni_dst[eidx, txn]
+    if params.ni_order == "robless":
+        return (cnt == 0) | (last == dst)
+    return st.rob_credit >= beats  # rob: end-to-end credit flow control
+
+
+def _ni_issue(st: EndpointState, mask, txn, dst, beats, params: NocParams):
+    E = txn.shape[0]
+    eidx = jnp.arange(E)
+    ni_cnt = st.ni_cnt.at[eidx, txn].add(mask.astype(jnp.int32))
+    ni_dst = st.ni_dst.at[eidx, txn].set(jnp.where(mask, dst, st.ni_dst[eidx, txn]))
+    rob = st.rob_credit - jnp.where(mask & (params.ni_order == "rob"), beats, 0)
+    return ni_cnt, ni_dst, rob
+
+
+def _ni_retire(ni_cnt, ni_dst, rob_credit, mask, txn, beats, params: NocParams):
+    E = txn.shape[0]
+    eidx = jnp.arange(E)
+    ni_cnt = ni_cnt.at[eidx, txn].add(-mask.astype(jnp.int32))
+    rob = rob_credit + jnp.where(mask & (params.ni_order == "rob"), beats, 0)
+    return ni_cnt, ni_dst, rob

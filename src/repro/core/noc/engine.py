@@ -1,0 +1,186 @@
+"""Vectorized cycle-accurate router fabric in JAX.
+
+One fabric = one physical channel (the paper instantiates three separate
+routers per tile: req / rsp / wide). State is a struct-of-arrays over
+[R routers, P ports, DEPTH fifo slots].
+
+Cycle semantics: arbitration and link decisions are both computed from the
+cycle-start snapshot, then applied. A flit therefore spends >= 1 cycle in the
+input buffer and >= 1 cycle in the output buffer: 2 cycles per router hop at
+zero load, matching the paper's Fig. 7.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.noc.topology import Topology
+
+FLIT_FIELDS = ("dst", "src", "kind", "txn", "last", "ts", "meta")
+
+
+def empty_flits(shape) -> dict:
+    return {f: jnp.zeros(shape, jnp.int32) for f in FLIT_FIELDS}
+
+
+def flit_where(c, a, b) -> dict:
+    return {f: jnp.where(c, a[f], b[f]) for f in FLIT_FIELDS}
+
+
+def flit_gather(flits: dict, *idx) -> dict:
+    return {f: flits[f][idx] for f in FLIT_FIELDS}
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class FabricState:
+    in_buf: dict  # [R, P, Din] flit fields
+    in_cnt: jnp.ndarray  # [R, P]
+    out_buf: dict  # [R, P, Dout]
+    out_cnt: jnp.ndarray  # [R, P]
+    rr_ptr: jnp.ndarray  # [R, P] round-robin pointer per *output* port
+    wh_lock: jnp.ndarray  # [R, P] wormhole: locked input port (-1 = free)
+
+
+def init_fabric(topo: Topology, depth_in: int, depth_out: int) -> FabricState:
+    R, P = topo.n_routers, topo.n_ports
+    return FabricState(
+        in_buf=empty_flits((R, P, depth_in)),
+        in_cnt=jnp.zeros((R, P), jnp.int32),
+        out_buf=empty_flits((R, P, depth_out)),
+        out_cnt=jnp.zeros((R, P), jnp.int32),
+        rr_ptr=jnp.zeros((R, P), jnp.int32),
+        wh_lock=jnp.full((R, P), -1, jnp.int32),
+    )
+
+
+def fifo_pop(buf: dict, cnt, pop_mask):
+    shifted = {f: jnp.roll(v, -1, axis=-1) for f, v in buf.items()}
+    newbuf = flit_where(pop_mask[..., None], shifted, buf)
+    return newbuf, cnt - pop_mask.astype(jnp.int32)
+
+
+def fifo_push(buf: dict, cnt, push_mask, flit: dict):
+    D = next(iter(buf.values())).shape[-1]
+    idx = jnp.clip(cnt, 0, D - 1)
+    onehot = jax.nn.one_hot(idx, D, dtype=jnp.bool_) & push_mask[..., None]
+    newbuf = {f: jnp.where(onehot, flit[f][..., None], buf[f]) for f in FLIT_FIELDS}
+    return newbuf, cnt + push_mask.astype(jnp.int32)
+
+
+def heads(buf: dict) -> dict:
+    return {f: v[..., 0] for f, v in buf.items()}
+
+
+@dataclass(frozen=True)
+class FabricTables:
+    route: jnp.ndarray  # [R, E]
+    link_src: jnp.ndarray  # [R, P, 2] upstream (router, port) feeding my in port
+    link_dst: jnp.ndarray  # [R, P, 2]
+    port_ep: jnp.ndarray  # [R, P] endpoint attached (-1)
+    ep_attach: jnp.ndarray  # [E, 2]
+
+
+def make_tables(topo: Topology) -> FabricTables:
+    R, P = topo.n_routers, topo.n_ports
+    link_src = np.full((R, P, 2), -1, np.int32)
+    for r in range(R):
+        for p in range(P):
+            r2, p2 = topo.link_to[r, p]
+            if r2 >= 0:
+                link_src[r2, p2] = (r, p)
+    return FabricTables(
+        route=jnp.asarray(topo.route),
+        link_src=jnp.asarray(link_src),
+        link_dst=jnp.asarray(topo.link_to),
+        port_ep=jnp.asarray(topo.port_ep),
+        ep_attach=jnp.asarray(topo.ep_attach),
+    )
+
+
+def fabric_cycle(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarray):
+    """One cycle: decide arb + link from the snapshot, then apply.
+
+    ep_ingress_space: [E] bool — endpoint can accept one flit this cycle.
+    Returns (state', ep_flit fields [E], ep_valid [E])."""
+    R, P = st.in_cnt.shape
+    Din = next(iter(st.in_buf.values())).shape[-1]
+    Dout = next(iter(st.out_buf.values())).shape[-1]
+
+    # ---------------- arbitration decisions (from snapshot) ----------------
+    h = heads(st.in_buf)
+    h_valid = st.in_cnt > 0
+    req_port = jnp.take_along_axis(tb.route, jnp.clip(h["dst"], 0, None), axis=1)
+    req_port = jnp.where(h_valid, req_port, -1)  # [R, P_in]
+
+    pout = jnp.arange(P)
+    pin = jnp.arange(P)[None, :, None]
+    elig = req_port[:, :, None] == pout[None, None, :]
+    locked = st.wh_lock[:, None, :]
+    elig &= (locked < 0) | (locked == pin)
+    elig &= (st.out_cnt < Dout)[:, None, :]  # no same-cycle fall-through
+
+    score = (pin - st.rr_ptr[:, None, :]) % P
+    score = jnp.where(elig, score, P + 1)
+    winner = jnp.argmin(score, axis=1)  # [R, P_out]
+    granted = jnp.take_along_axis(score, winner[:, None, :], axis=1)[:, 0, :] <= P
+    win_onehot = jax.nn.one_hot(winner, P, axis=1, dtype=jnp.bool_) & granted[:, None, :]
+    arb_pop = jnp.any(win_onehot, axis=2)  # [R, P_in]
+    chosen = {f: jnp.take_along_axis(h[f], winner, axis=1) for f in FLIT_FIELDS}
+
+    rr = jnp.where(granted, (winner + 1) % P, st.rr_ptr)
+    is_tail = chosen["last"] > 0
+    wh = jnp.where(granted & ~is_tail, winner, st.wh_lock)
+    wh = jnp.where(granted & is_tail, -1, wh)
+
+    # ---------------- link decisions (from snapshot) ----------------
+    out_heads = heads(st.out_buf)
+    out_valid = st.out_cnt > 0
+
+    er, ep_p = tb.ep_attach[:, 0], tb.ep_attach[:, 1]
+    ep_flit = flit_gather(out_heads, er, ep_p)
+    ep_valid = out_valid[er, ep_p] & ep_ingress_space
+
+    src_r, src_p = tb.link_src[..., 0], tb.link_src[..., 1]
+    have_up = src_r >= 0
+    up_head = flit_gather(out_heads, jnp.clip(src_r, 0, R - 1), jnp.clip(src_p, 0, P - 1))
+    up_valid = out_valid[jnp.clip(src_r, 0, R - 1), jnp.clip(src_p, 0, P - 1)] & have_up
+    # space after this cycle's arb pops (slot freed same cycle is reusable)
+    in_cnt_after_pop = st.in_cnt - arb_pop.astype(jnp.int32)
+    link_accept = up_valid & (in_cnt_after_pop < Din)
+
+    # sent mask on the upstream side
+    dst_r, dst_p = tb.link_dst[..., 0], tb.link_dst[..., 1]
+    sent = jnp.where(
+        dst_r >= 0,
+        link_accept[jnp.clip(dst_r, 0, R - 1), jnp.clip(dst_p, 0, P - 1)],
+        False,
+    )
+    sent = sent.at[er, ep_p].set(sent[er, ep_p] | ep_valid)
+
+    # ---------------- apply ----------------
+    in1, in_cnt1 = fifo_pop(st.in_buf, st.in_cnt, arb_pop)
+    in2, in_cnt2 = fifo_push(in1, in_cnt1, link_accept, up_head)
+    out1, out_cnt1 = fifo_pop(st.out_buf, st.out_cnt, sent)
+    out2, out_cnt2 = fifo_push(out1, out_cnt1, granted, chosen)
+
+    return FabricState(in2, in_cnt2, out2, out_cnt2, rr, wh), ep_flit, ep_valid
+
+
+def inject(st: FabricState, tb: FabricTables, flit: dict, want: jnp.ndarray):
+    """Endpoints push one flit into their attached port's in_buf (seen by the
+    arbiter next cycle). flit fields [E]; want [E]. Returns (state, accepted)."""
+    Din = next(iter(st.in_buf.values())).shape[-1]
+    R, P = st.in_cnt.shape
+    er, ep_p = tb.ep_attach[:, 0], tb.ep_attach[:, 1]
+    space = st.in_cnt[er, ep_p] < Din
+    accepted = want & space
+    push_mask = jnp.zeros((R, P), bool).at[er, ep_p].set(accepted)
+    flit_rp = {
+        f: jnp.zeros((R, P), jnp.int32).at[er, ep_p].set(flit[f]) for f in FLIT_FIELDS
+    }
+    in_buf, in_cnt = fifo_push(st.in_buf, st.in_cnt, push_mask, flit_rp)
+    return FabricState(in_buf, in_cnt, st.out_buf, st.out_cnt, st.rr_ptr, st.wh_lock), accepted

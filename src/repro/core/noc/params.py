@@ -1,0 +1,64 @@
+"""FlooNoC microarchitecture parameters (paper Section III-V defaults)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class NocParams:
+    # router microarchitecture
+    depth_in: int = 2  # input FIFO depth (paper: minimal input buffers)
+    depth_out: int = 2  # output buffers (timing closure across >1mm links)
+
+    # endpoint / NI
+    n_txn_ids: int = 8  # AXI TxnIDs tracked per endpoint
+    ni_order: str = "robless"  # "robless" | "rob"
+    rob_beats: int = 128  # RoB capacity in wide beats (8 kB / 64 B)
+    max_outstanding: int = 32  # per DMA stream
+
+    # cluster-internal latencies (calibrated to Fig. 7: 22-cycle neighbor
+    # round trip = 8 router + 3 NI + 11 cluster/memory)
+    cluster_req_lat: int = 4
+    cluster_rsp_lat: int = 4
+    mem_lat: int = 3
+    ni_req_lat: int = 1  # AXI -> flit packing
+    ni_rsp_lat: int = 1  # flit -> AXI unpacking (target side: 1 more)
+
+    # HBM model (HBM2E MT54A16G808A00AC-36: 57.6 GB/s per channel)
+    # wide link moves 64 B/cycle @ 1.26 GHz = 80.6 GB/s -> ratio 0.714
+    hbm_rate: float = 57.6 / 80.6
+    hbm_eff: float = 0.97  # refresh/row-miss derate (zero-load util ~97%)
+
+    # link frequency / widths (Table I)
+    freq_ghz: float = 1.26
+    narrow_bits: int = 64
+    wide_bits: int = 512
+
+    # egress queue depths
+    egress_depth: int = 8
+    memq_depth: int = 256  # >= fan-in x max_outstanding for the workloads used
+
+
+# flit kinds
+NARROW_REQ = 0
+NARROW_RSP = 1
+WIDE_AR = 2  # wide read request (rides the narrow `req` link)
+WIDE_R = 3  # wide read data beat (wide link)
+WIDE_AW_W = 4  # wide write addr+data beats (wide link, wormhole)
+WIDE_B = 5  # write response (rsp link)
+
+# physical channels
+CH_REQ = 0
+CH_RSP = 1
+CH_WIDE = 2
+N_CHANNELS = 3
+
+# channel a kind travels on
+KIND_CHANNEL = {
+    NARROW_REQ: CH_REQ,
+    NARROW_RSP: CH_RSP,
+    WIDE_AR: CH_REQ,
+    WIDE_R: CH_WIDE,
+    WIDE_AW_W: CH_WIDE,
+    WIDE_B: CH_RSP,
+}

@@ -1,0 +1,463 @@
+"""Full-system FlooNoC simulator: 3 physical channels (req/rsp/wide) +
+vectorized endpoints, stepped with jax.lax.scan (jit-compiled, cycle-accurate).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.noc import engine as eng
+from repro.core.noc import endpoints as epm
+from repro.core.noc.params import (
+    CH_REQ,
+    CH_RSP,
+    CH_WIDE,
+    NARROW_REQ,
+    NARROW_RSP,
+    WIDE_AR,
+    WIDE_AW_W,
+    WIDE_B,
+    WIDE_R,
+    NocParams,
+)
+from repro.core.noc.topology import Topology
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SimState:
+    fabrics: list  # [3] FabricState
+    eps: epm.EndpointState
+    cycle: jnp.ndarray
+
+
+def _flit(dst, src, kind, txn, last, ts, meta):
+    def arr(v, ref):
+        return jnp.broadcast_to(jnp.asarray(v, jnp.int32), ref.shape)
+
+    return {
+        "dst": dst, "src": src, "kind": arr(kind, dst), "txn": txn,
+        "last": arr(last, dst), "ts": arr(ts, dst), "meta": arr(meta, dst),
+    }
+
+
+def _ingest(st: epm.EndpointState, deliver, cycle, params: NocParams, wl, is_hbm):
+    """Process delivered flits on all three channels. deliver: {ch: (flit, valid)}."""
+    E = st.lat_sum.shape[0]
+    eidx = jnp.arange(E)
+    ni_cnt, ni_dst, rob = st.ni_cnt, st.ni_dst, st.rob_credit
+
+    # ---- req channel: we are the target ----
+    f, v = deliver[CH_REQ]
+    is_nreq = v & (f["kind"] == NARROW_REQ)
+    is_war = v & (f["kind"] == WIDE_AR)
+    mq, mq_cnt = st.mq, st.mq_cnt
+    # narrow reads: the multi-banked L1 SPM is fully pipelined (1 req/cycle
+    # throughput); model as a fixed-latency response through the egress delay
+    # queue. Wide bursts go through the serializing memory server below.
+    eg, eg_ready, eg_cnt = st.eg, st.eg_ready, st.eg_cnt
+    rsp_flit = _flit(f["src"], jnp.arange(is_nreq.shape[0], dtype=jnp.int32),
+                     NARROW_RSP, f["txn"], 1, 0, 1)
+    rsp_flit["ts"] = f["ts"]
+    rsp_ready = jnp.broadcast_to(
+        cycle + params.ni_rsp_lat + params.mem_lat + params.ni_req_lat,
+        is_nreq.shape).astype(jnp.int32)
+    eg, eg_ready, eg_cnt = epm._eg_push(eg, eg_ready, eg_cnt, CH_RSP, is_nreq,
+                                        rsp_flit, rsp_ready)
+    mq, mq_cnt = _push2(st, mq, mq_cnt, is_war, f["src"], f["txn"], f["meta"], WIDE_R, f["ts"])
+
+    # ---- wide channel ----
+    f, v = deliver[CH_WIDE]
+    # read data beats coming back to us (we are the issuer)
+    is_r = v & (f["kind"] == WIDE_R)
+    C = st.d_outst.shape[1]
+    stream = jnp.clip(f["txn"], 0, C - 1)
+    d_beats_got = st.d_beats_got.at[eidx, stream].add(is_r.astype(jnp.int32))
+    beats_rcvd = st.beats_rcvd + is_r.astype(jnp.int32)
+    r_done = is_r & (f["last"] > 0)
+    d_outst = st.d_outst.at[eidx, stream].add(-r_done.astype(jnp.int32))
+    d_done = st.d_done.at[eidx, stream].add(r_done.astype(jnp.int32))
+    full_beats = jnp.full((E,), wl.dma_beats, jnp.int32)
+    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, r_done, f["txn"],
+                                         full_beats, params)
+    # write bursts arriving (we are the target); wormhole => no interleave
+    is_w = v & (f["kind"] == WIDE_AW_W)
+    beats_rcvd = beats_rcvd + is_w.astype(jnp.int32)
+    any_beat = is_r | is_w
+    last_rx = jnp.where(any_beat, jnp.broadcast_to(cycle, any_beat.shape).astype(jnp.int32), st.last_rx)
+    first_rx = jnp.where(any_beat & (st.first_rx < 0),
+                         jnp.broadcast_to(cycle, any_beat.shape).astype(jnp.int32), st.first_rx)
+    w_tail = is_w & (f["last"] > 0)
+    mq, mq_cnt = _push2(st, mq, mq_cnt, w_tail, f["src"], f["txn"], 1, WIDE_B, f["ts"])
+
+    # ---- rsp channel ----
+    f, v = deliver[CH_RSP]
+    is_nrsp = v & (f["kind"] == NARROW_RSP)
+    rx_const = params.cluster_rsp_lat
+    lat_sum = st.lat_sum + jnp.where(is_nrsp, (cycle - f["ts"] + rx_const).astype(jnp.float32), 0.0)
+    lat_cnt = st.lat_cnt + is_nrsp.astype(jnp.int32)
+    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, is_nrsp, f["txn"], 1, params)
+    is_b = v & (f["kind"] == WIDE_B)
+    stream_b = jnp.clip(f["txn"], 0, C - 1)
+    d_outst = d_outst.at[eidx, stream_b].add(-is_b.astype(jnp.int32))
+    d_done = d_done.at[eidx, stream_b].add(is_b.astype(jnp.int32))
+    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, is_b, f["txn"],
+                                         jnp.full((E,), wl.dma_beats), params)
+
+    import dataclasses
+
+    return dataclasses.replace(
+        st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob, mq=mq, mq_cnt=mq_cnt,
+        d_beats_got=d_beats_got, beats_rcvd=beats_rcvd, d_outst=d_outst,
+        d_done=d_done, lat_sum=lat_sum, lat_cnt=lat_cnt, last_rx=last_rx,
+        first_rx=first_rx, eg=eg, eg_ready=eg_ready, eg_cnt=eg_cnt,
+    )
+
+
+def _push2(st, mq, mq_cnt, mask, src, txn, beats, kind, ts):
+    tmp = st
+    import dataclasses
+
+    tmp = dataclasses.replace(st, mq=mq, mq_cnt=mq_cnt)
+    return epm._mq_push(tmp, mask, src, txn, beats, kind, ts)
+
+
+def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
+    """Narrow + DMA request generation into egress queues."""
+    import dataclasses
+
+    E = st.lat_sum.shape[0]
+    eidx = jnp.arange(E)
+    eg, eg_ready, eg_cnt = st.eg, st.eg_ready, st.eg_cnt
+    ni_cnt, ni_dst, rob = st.ni_cnt, st.ni_dst, st.rob_credit
+    EQ = eg_ready.shape[-1]
+    T = ni_cnt.shape[1]
+    src_delay = params.cluster_req_lat + params.ni_req_lat
+
+    narrow_rate = jnp.asarray(wl.narrow_rate)
+    narrow_dst = jnp.asarray(wl.narrow_dst)
+
+    # ---- narrow generator ----
+    n_acc = st.n_acc + narrow_rate
+    want_n = (n_acc >= 1.0) & (narrow_dst != -1)
+    dst_n = jnp.where(
+        narrow_dst == -2,
+        _uniform_dst(eidx, st.n_seq, cycle, n_tiles),
+        narrow_dst,
+    ).astype(jnp.int32)
+    txn_n = st.n_seq % T
+    ok_n = epm._ni_check(
+        dataclasses.replace(st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob),
+        txn_n, dst_n, params, jnp.ones((E,), jnp.int32))
+    space_n = eg_cnt[CH_REQ] < EQ
+    fire_n = want_n & ok_n & space_n
+    stall_n = want_n & ~ok_n
+    flit_n = _flit(dst_n, eidx.astype(jnp.int32), NARROW_REQ, txn_n, 1, cycle, 1)
+    eg, eg_ready, eg_cnt = epm._eg_push(
+        eg, eg_ready, eg_cnt, CH_REQ, fire_n, flit_n,
+        jnp.broadcast_to(cycle + src_delay, (E,)).astype(jnp.int32))
+    ni_cnt, ni_dst, rob = epm._ni_issue(
+        dataclasses.replace(st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob),
+        fire_n, txn_n, dst_n, jnp.ones((E,), jnp.int32), params)
+    n_acc = jnp.where(fire_n, n_acc - 1.0, jnp.minimum(n_acc, 4.0))
+    n_seq = st.n_seq + fire_n.astype(jnp.int32)
+    n_sent = st.n_sent + fire_n.astype(jnp.int32)
+
+    # ---- DMA: pick one eligible stream per endpoint (rotating priority) ----
+    C = st.d_outst.shape[1]
+    dma_dst_t = jnp.asarray(wl.dma_dst)  # [E, C]
+    dma_alt_t = jnp.asarray(wl.dma_alt_dst)
+    txn_of_stream = (
+        jnp.arange(C, dtype=jnp.int32)[None, :] % T
+        if wl.unique_txn_per_stream
+        else jnp.zeros((1, C), jnp.int32)
+    )
+    txn_of_stream = jnp.broadcast_to(txn_of_stream, (E, C))
+    # per-(e, c) desired destination for the *next* transfer
+    odd = (st.d_seq % 2) == 1
+    dst_ec = jnp.where((dma_alt_t >= 0) & odd, dma_alt_t, dma_dst_t)
+    dst_ec = jnp.where(
+        dma_dst_t == -2,
+        _uniform_dst(eidx[:, None], st.d_seq * C + jnp.arange(C)[None, :], cycle, n_tiles),
+        dst_ec,
+    ).astype(jnp.int32)
+    beats = jnp.full((E, C), wl.dma_beats, jnp.int32)
+    st_tmp = dataclasses.replace(st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob)
+    ok_ec = jnp.stack(
+        [epm._ni_check(st_tmp, txn_of_stream[:, c], dst_ec[:, c], params, beats[:, c])
+         for c in range(C)], axis=1)
+    want_ec = (st.d_txns_left > 0) & (st.d_outst < params.max_outstanding) & (dma_dst_t != -1)
+    elig = want_ec & ok_ec
+    # rotating pick
+    rot = (jnp.arange(C)[None, :] - (cycle + eidx[:, None])) % C
+    score = jnp.where(elig, rot, C + 1)
+    pick = jnp.argmin(score, axis=1)
+    any_pick = jnp.take_along_axis(score, pick[:, None], axis=1)[:, 0] <= C
+    stall_d = jnp.any(want_ec & ~ok_ec, axis=1) & ~any_pick
+
+    pick_dst = dst_ec[eidx, pick]
+    pick_txn = txn_of_stream[eidx, pick]
+    pick_beats = beats[eidx, pick]
+
+    if not wl.dma_write:
+        space_r = eg_cnt[CH_REQ] < EQ
+        fire_d = any_pick & space_r
+        flit_ar = _flit(pick_dst, eidx.astype(jnp.int32), WIDE_AR, pick_txn, 1,
+                        cycle, pick_beats)
+        eg, eg_ready, eg_cnt = epm._eg_push(
+            eg, eg_ready, eg_cnt, CH_REQ, fire_d, flit_ar,
+            jnp.broadcast_to(cycle + src_delay, (E,)).astype(jnp.int32))
+        w_stream, w_left, w_dst, w_txn, w_ts = (
+            st.w_stream, st.w_left, st.w_dst, st.w_txn, st.w_ts)
+    else:
+        # claim the write serializer
+        fire_d = any_pick & (st.w_stream < 0)
+        w_stream = jnp.where(fire_d, pick, st.w_stream)
+        w_left = jnp.where(fire_d, pick_beats, st.w_left)
+        w_dst = jnp.where(fire_d, pick_dst, st.w_dst)
+        w_txn = jnp.where(fire_d, pick_txn, st.w_txn)
+        w_ts = jnp.where(fire_d, jnp.broadcast_to(cycle, (E,)).astype(jnp.int32), st.w_ts)
+
+    ni_cnt, ni_dst, rob = epm._ni_issue(
+        dataclasses.replace(st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob),
+        fire_d, pick_txn, pick_dst, pick_beats, params)
+    d_txns_left = st.d_txns_left.at[eidx, pick].add(-fire_d.astype(jnp.int32))
+    d_outst = st.d_outst.at[eidx, pick].add(fire_d.astype(jnp.int32))
+    d_seq = st.d_seq.at[eidx, pick].add(fire_d.astype(jnp.int32))
+
+    # ---- write burst serializer: one AW_W beat per cycle ----
+    beats_sent = st.beats_sent
+    if wl.dma_write:
+        active = w_stream >= 0
+        space_w = eg_cnt[CH_WIDE] < EQ
+        emit = active & space_w
+        last = (w_left == 1).astype(jnp.int32)
+        flit_w = _flit(w_dst, eidx.astype(jnp.int32), WIDE_AW_W, w_txn, 0, w_ts, w_left)
+        flit_w["last"] = jnp.where(emit, last, 0)
+        eg, eg_ready, eg_cnt = epm._eg_push(
+            eg, eg_ready, eg_cnt, CH_WIDE, emit, flit_w,
+            jnp.broadcast_to(cycle + 1, (E,)).astype(jnp.int32))
+        beats_sent = beats_sent + emit.astype(jnp.int32)
+        w_left = jnp.where(emit, w_left - 1, w_left)
+        done_w = emit & (w_left == 0)
+        w_stream = jnp.where(done_w, -1, w_stream)
+
+    ni_stall = st.ni_stall + stall_n.astype(jnp.int32) + stall_d.astype(jnp.int32)
+    return dataclasses.replace(
+        st, eg=eg, eg_ready=eg_ready, eg_cnt=eg_cnt, ni_cnt=ni_cnt, ni_dst=ni_dst,
+        rob_credit=rob, n_acc=n_acc, n_seq=n_seq, n_sent=n_sent,
+        d_txns_left=d_txns_left, d_outst=d_outst, d_seq=d_seq,
+        w_stream=w_stream, w_left=w_left, w_dst=w_dst, w_txn=w_txn, w_ts=w_ts,
+        beats_sent=beats_sent, ni_stall=ni_stall,
+    )
+
+
+def _uniform_dst(e, seq, cycle, n_tiles):
+    h = epm._hash(e, seq, 0)
+    other = h % jnp.maximum(n_tiles - 1, 1)
+    return ((e + 1 + other) % n_tiles).astype(jnp.int32)
+
+
+def _memory(st: epm.EndpointState, cycle, params: NocParams, is_hbm, is_mem):
+    """Memory server: pop requests, serve after latency, emit response beats."""
+    import dataclasses
+
+    E = st.lat_sum.shape[0]
+    eidx = jnp.arange(E)
+    EQ = st.eg_ready.shape[-1]
+
+    hbm_tok = jnp.where(
+        is_hbm, jnp.minimum(st.hbm_tok + params.hbm_rate * params.hbm_eff, 8.0),
+        jnp.asarray(1.0, jnp.float32))
+
+    m_busy = jnp.maximum(st.m_busy - 1, 0)
+    # pop next request when idle
+    can_pop = ~st.m_active & (st.mq_cnt > 0) & is_mem
+    head = {f: st.mq[f][:, 0] for f in epm.MQ_FIELDS}
+    mq = {
+        f: jnp.where(can_pop[:, None], jnp.roll(st.mq[f], -1, axis=-1), st.mq[f])
+        for f in epm.MQ_FIELDS
+    }
+    mq_cnt = st.mq_cnt - can_pop.astype(jnp.int32)
+    m_active = st.m_active | can_pop
+    m_busy = jnp.where(can_pop, params.mem_lat + params.ni_rsp_lat, m_busy)
+    m_beats = jnp.where(can_pop, head["beats"], st.m_beats)
+    m_flit = {
+        f: jnp.where(can_pop, v, st.m_flit[f])
+        for f, v in {
+            "dst": head["src"], "src": eidx.astype(jnp.int32), "kind": head["kind"],
+            "txn": head["txn"], "last": jnp.zeros((E,), jnp.int32),
+            "ts": head["ts"], "meta": head["beats"],
+        }.items()
+    }
+
+    # emit a beat when serving
+    ch_of_kind = jnp.where(m_flit["kind"] == WIDE_R, CH_WIDE, CH_RSP)
+    tok_ok = jnp.where(is_hbm & (m_flit["kind"] == WIDE_R), hbm_tok >= 1.0, True)
+    eg_cnt = st.eg_cnt
+    space = jnp.where(ch_of_kind == CH_WIDE, eg_cnt[CH_WIDE] < EQ, eg_cnt[CH_RSP] < EQ)
+    emit = m_active & (m_busy == 0) & tok_ok & space & (m_beats > 0)
+    out = dict(m_flit)
+    out["last"] = (m_beats == 1).astype(jnp.int32)
+    out["meta"] = m_beats
+    ready = jnp.broadcast_to(cycle + params.ni_req_lat, (E,)).astype(jnp.int32)
+
+    eg, eg_ready_, eg_cnt = st.eg, st.eg_ready, st.eg_cnt
+    for ch in (CH_RSP, CH_WIDE):
+        m = emit & (ch_of_kind == ch)
+        eg, eg_ready_, eg_cnt = epm._eg_push(eg, eg_ready_, eg_cnt, ch, m, out, ready)
+
+    hbm_tok = jnp.where(is_hbm & emit & (m_flit["kind"] == WIDE_R), hbm_tok - 1.0, hbm_tok)
+    hbm_served = st.hbm_served + (emit & is_hbm & (m_flit["kind"] == WIDE_R)).astype(jnp.int32)
+    m_beats = jnp.where(emit, m_beats - 1, m_beats)
+    m_active = m_active & ~(emit & (m_beats == 0))
+
+    return dataclasses.replace(
+        st, mq=mq, mq_cnt=mq_cnt, m_busy=m_busy, m_beats=m_beats, m_flit=m_flit,
+        m_active=m_active, hbm_tok=hbm_tok, hbm_served=hbm_served,
+        eg=eg, eg_ready=eg_ready_, eg_cnt=eg_cnt,
+    )
+
+
+@dataclass
+class Sim:
+    topo: Topology
+    params: NocParams
+    wl: epm.Workload
+    tables: eng.FabricTables
+    is_hbm: jnp.ndarray
+    is_mem: jnp.ndarray
+
+    def init_state(self) -> SimState:
+        fabrics = [
+            eng.init_fabric(self.topo, self.params.depth_in, self.params.depth_out)
+            for _ in range(3)
+        ]
+        eps = epm.init_endpoints(self.topo.n_endpoints, self.params, self.wl.n_streams)
+        txns = jnp.asarray(self.wl.dma_txns)
+        import dataclasses
+
+        eps = dataclasses.replace(eps, d_txns_left=txns)
+        return SimState(fabrics=fabrics, eps=eps, cycle=jnp.zeros((), jnp.int32))
+
+    def step(self, st: SimState) -> SimState:
+        import dataclasses
+
+        cycle = st.cycle
+        E = self.topo.n_endpoints
+        # 1) fabric cycles (endpoints always have ingest capacity: processing
+        #    is combinational on delivery)
+        space = jnp.ones((E,), bool)
+        deliver = {}
+        fabrics = []
+        for ch in range(3):
+            f_st, ep_flit, ep_valid = eng.fabric_cycle(st.fabrics[ch], self.tables, space)
+            fabrics.append(f_st)
+            deliver[ch] = (ep_flit, ep_valid)
+        # 2) endpoint processing
+        eps = _ingest(st.eps, deliver, cycle, self.params, self.wl, self.is_hbm)
+        eps = _generators(eps, cycle, self.params, self.wl, self.wl.n_tiles)
+        eps = _memory(eps, cycle, self.params, self.is_hbm, self.is_mem)
+        # 3) egress -> injection (heads whose ready time has come)
+        for ch in range(3):
+            head = {f: eps.eg[f][ch, :, 0] for f in eng.FLIT_FIELDS}
+            ready = (eps.eg_cnt[ch] > 0) & (eps.eg_ready[ch, :, 0] <= cycle)
+            fabrics[ch], accepted = eng.inject(fabrics[ch], self.tables, head, ready)
+            eg, eg_ready, eg_cnt = epm._eg_pop(eps.eg, eps.eg_ready, eps.eg_cnt, ch, accepted)
+            eps = dataclasses.replace(eps, eg=eg, eg_ready=eg_ready, eg_cnt=eg_cnt)
+        return SimState(fabrics=fabrics, eps=eps, cycle=cycle + 1)
+
+
+def build_sim(topo: Topology, params: NocParams, wl: epm.Workload) -> Sim:
+    n_tiles = wl.n_tiles
+    E = topo.n_endpoints
+    is_hbm = np.zeros((E,), bool)
+    n_hbm = topo.meta.get("n_hbm", 0)
+    if n_hbm:
+        is_hbm[E - n_hbm :] = True
+    is_mem = np.ones((E,), bool)  # every endpoint can serve (tiles: SPM)
+    return Sim(
+        topo=topo, params=params, wl=wl, tables=eng.make_tables(topo),
+        is_hbm=jnp.asarray(is_hbm), is_mem=jnp.asarray(is_mem),
+    )
+
+
+def run(sim: Sim, n_cycles: int, state: SimState | None = None) -> SimState:
+    st = state if state is not None else sim.init_state()
+
+    @jax.jit
+    def many(st):
+        def body(s, _):
+            return sim.step(s), None
+
+        s, _ = jax.lax.scan(body, st, None, length=n_cycles)
+        return s
+
+    return many(st)
+
+
+def run_trace(sim: Sim, n_cycles: int, state: SimState | None = None):
+    """Like run(), but also returns per-cycle endpoint deliveries
+    {channel: (flit fields [T, E], valid [T, E])} for invariant checks."""
+    st = state if state is not None else sim.init_state()
+
+    @jax.jit
+    def many(st):
+        def body(s, _):
+            cycle = s.cycle
+            E = sim.topo.n_endpoints
+            space = jnp.ones((E,), bool)
+            deliver = {}
+            fabrics = []
+            for ch in range(3):
+                f_st, ep_flit, ep_valid = eng.fabric_cycle(s.fabrics[ch], sim.tables, space)
+                fabrics.append(f_st)
+                deliver[ch] = (ep_flit, ep_valid)
+            eps = _ingest(s.eps, deliver, cycle, sim.params, sim.wl, sim.is_hbm)
+            eps = _generators(eps, cycle, sim.params, sim.wl, sim.wl.n_tiles)
+            eps = _memory(eps, cycle, sim.params, sim.is_hbm, sim.is_mem)
+            import dataclasses as dc
+
+            for ch in range(3):
+                head = {f: eps.eg[f][ch, :, 0] for f in eng.FLIT_FIELDS}
+                ready = (eps.eg_cnt[ch] > 0) & (eps.eg_ready[ch, :, 0] <= cycle)
+                fabrics[ch], accepted = eng.inject(fabrics[ch], sim.tables, head, ready)
+                eg, eg_ready, eg_cnt = epm._eg_pop(eps.eg, eps.eg_ready, eps.eg_cnt, ch, accepted)
+                eps = dc.replace(eps, eg=eg, eg_ready=eg_ready, eg_cnt=eg_cnt)
+            return SimState(fabrics=fabrics, eps=eps, cycle=cycle + 1), deliver
+
+        s, trace = jax.lax.scan(body, st, None, length=n_cycles)
+        return s, trace
+
+    return many(st)
+
+
+def stats(sim: Sim, st: SimState) -> dict:
+    eps = st.eps
+    cyc = int(st.cycle)
+    n_tiles = sim.wl.n_tiles
+    lat = np.asarray(eps.lat_sum) / np.maximum(np.asarray(eps.lat_cnt), 1)
+    out = {
+        "cycles": cyc,
+        "narrow_lat_mean": lat[:n_tiles],
+        "narrow_lat_cnt": np.asarray(eps.lat_cnt)[:n_tiles],
+        "beats_rcvd": np.asarray(eps.beats_rcvd),
+        "beats_sent": np.asarray(eps.beats_sent),
+        "hbm_served": np.asarray(eps.hbm_served),
+        "ni_stalls": np.asarray(eps.ni_stall),
+        "dma_done": np.asarray(eps.d_done),
+        "last_rx": np.asarray(eps.last_rx),
+        "first_rx": np.asarray(eps.first_rx),
+        "mq_max": int(np.asarray(eps.mq_cnt).max()),
+        "wide_util": np.asarray(eps.beats_rcvd)[:n_tiles].sum() / max(cyc * n_tiles, 1),
+        "hbm_util": (
+            np.asarray(eps.hbm_served).sum()
+            / max(cyc * max(int(np.asarray(sim.is_hbm).sum()), 1), 1)
+            / sim.params.hbm_rate
+        ),
+    }
+    return out

@@ -1,0 +1,206 @@
+"""Generic NoC topology: routers with ports, endpoint attachments, table-based
+routing (the paper's router supports source/XY/table routing — table routing
+subsumes XY on a mesh and also expresses the Occamy hierarchical-Xbar
+baseline on the same engine).
+
+Occamy-style multi-cycle links (spill registers) are modeled with repeater
+nodes: 1-in/1-out passthrough routers, exactly like a spill register.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Topology:
+    n_routers: int
+    n_ports: int  # max ports per router (padded)
+    n_endpoints: int
+    # wiring: for router r, port p: (dst_router, dst_port) or (-1, -1)
+    link_to: np.ndarray  # [R, P, 2] int32
+    # endpoint e attaches at (router, port): endpoint ingress/egress
+    ep_attach: np.ndarray  # [E, 2] int32
+    # routing table: out port for (router, dst_endpoint)
+    route: np.ndarray  # [R, E] int32
+    # metadata
+    name: str = "mesh"
+    tile_coord: np.ndarray | None = None  # [E, 2] for mesh endpoints (x, y)
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def port_ep(self) -> np.ndarray:
+        """[R, P] endpoint id attached at that router port, or -1."""
+        out = np.full((self.n_routers, self.n_ports), -1, np.int32)
+        for e, (r, p) in enumerate(self.ep_attach):
+            out[r, p] = e
+        return out
+
+    def hops(self, src_ep: int, dst_ep: int) -> int:
+        """Router traversals from src endpoint to dst endpoint (for checks)."""
+        r, p = self.ep_attach[src_ep]
+        n = 0
+        cur = r
+        visited = 0
+        while True:
+            n += 1
+            out_p = self.route[cur, dst_ep]
+            if (self.port_ep[cur, out_p]) == dst_ep:
+                return n
+            nxt, _ = self.link_to[cur, out_p]
+            assert nxt >= 0, "route leads off fabric"
+            cur = nxt
+            visited += 1
+            assert visited < 10 * self.n_routers, "routing loop"
+
+
+# ----------------------------------------------------------------------
+# 2D mesh (FlooNoC compute mesh: ny rows x nx cols, XY routing,
+# HBM endpoints on the west edge - one per row, paper Sec. IV-B)
+# ----------------------------------------------------------------------
+N, E, S, W, L = 0, 1, 2, 3, 4  # port ids
+
+
+def build_mesh(nx: int = 4, ny: int = 8, hbm_west: bool = True) -> Topology:
+    R = nx * ny
+    P = 5
+    rid = lambda x, y: y * nx + x
+
+    link_to = np.full((R, P, 2), -1, np.int32)
+    for y in range(ny):
+        for x in range(nx):
+            r = rid(x, y)
+            if y + 1 < ny:
+                link_to[r, N] = (rid(x, y + 1), S)
+            if y > 0:
+                link_to[r, S] = (rid(x, y - 1), N)
+            if x + 1 < nx:
+                link_to[r, E] = (rid(x + 1, y), W)
+            if x > 0:
+                link_to[r, W] = (rid(x - 1, y), E)
+
+    # endpoints: tiles 0..R-1 on local ports; HBM channels ny..: west edge
+    eps = [(rid(x, y), L) for y in range(ny) for x in range(nx)]
+    n_tiles = len(eps)
+    if hbm_west:
+        eps += [(rid(0, y), W) for y in range(ny)]
+    ep_attach = np.array(eps, np.int32)
+    Etot = len(eps)
+
+    tile_coord = np.zeros((Etot, 2), np.int32)
+    for e, (r, p) in enumerate(eps):
+        tile_coord[e] = (r % nx, r // nx)
+
+    # XY routing tables: route X first, then Y (paper: dimension-ordered)
+    route = np.full((R, Etot), -1, np.int32)
+    for r in range(R):
+        x, y = r % nx, r // nx
+        for e in range(Etot):
+            er, ep_port = eps[e]
+            ex, ey = er % nx, er // nx
+            if e >= n_tiles and hbm_west:
+                # HBM endpoint sits off the west port of (0, ey)
+                if (x, y) == (0, ey):
+                    route[r, e] = W
+                    continue
+                # route to its router via XY with target x = 0
+                ex = 0
+            if (x, y) == (ex, ey):
+                route[r, e] = ep_port if e < n_tiles else W
+            elif x != ex:
+                route[r, e] = E if ex > x else W
+            else:
+                route[r, e] = N if ey > y else S
+    return Topology(
+        n_routers=R, n_ports=P, n_endpoints=Etot, link_to=link_to,
+        ep_attach=ep_attach, route=route, name=f"mesh{nx}x{ny}",
+        tile_coord=tile_coord,
+        meta={"nx": nx, "ny": ny, "n_tiles": n_tiles, "n_hbm": ny if hbm_west else 0},
+    )
+
+
+# ----------------------------------------------------------------------
+# Occamy baseline: 6 groups x 4 clusters, two-level AXI4 Xbar hierarchy,
+# spill-register repeater chains between levels (paper Sec. VII)
+# ----------------------------------------------------------------------
+def build_occamy(n_groups: int = 6, clusters_per_group: int = 4, n_hbm: int = 8,
+                 spill: int = 4) -> Topology:
+    """Routers: [0..n_groups) group xbars, n_groups = top xbar, then repeaters.
+    Endpoints: clusters (group-attached), then HBM channels (top-attached)."""
+    n_clusters = n_groups * clusters_per_group
+    top = n_groups
+    routers = n_groups + 1
+    # ports: group xbar: clusters_per_group + 1 uplink (+pad)
+    # top xbar: n_groups + n_hbm
+    P = max(clusters_per_group + 1, n_groups + n_hbm)
+
+    links: list[tuple[int, int, int, int]] = []  # (r1, p1, r2, p2) bidirectional
+    repeaters: list[int] = []
+    rep_group: dict[int, int] = {}  # repeater -> group whose chain it sits on
+
+    def add_chain(r1, p1, r2, p2, k, group):
+        """Connect r1.p1 <-> r2.p2 through k repeater nodes (spill registers).
+        Repeater port 0 faces the group side (r1), port 1 the top side (r2)."""
+        nonlocal routers
+        if k == 0:
+            links.append((r1, p1, r2, p2))
+            return
+        chain = list(range(routers, routers + k))
+        repeaters.extend(chain)
+        for c in chain:
+            rep_group[c] = group
+        routers += k
+        prev, pp = r1, p1
+        for c in chain:
+            links.append((prev, pp, c, 0))
+            prev, pp = c, 1
+        links.append((prev, pp, r2, p2))
+
+    for g in range(n_groups):
+        add_chain(g, clusters_per_group, top, g, spill, g)
+
+    link_to = None  # filled after routers count known
+
+    eps = []
+    for g in range(n_groups):
+        for c in range(clusters_per_group):
+            eps.append((g, c))
+    for h in range(n_hbm):
+        eps.append((top, n_groups + h))
+    ep_attach = np.array(eps, np.int32)
+    Etot = len(eps)
+
+    Pmax = max(P, 2)
+    link_to = np.full((routers, Pmax, 2), -1, np.int32)
+    for r1, p1, r2, p2 in links:
+        link_to[r1, p1] = (r2, p2)
+        link_to[r2, p2] = (r1, p1)
+
+    # routing tables
+    route = np.full((routers, Etot), -1, np.int32)
+    for e, (er, ep_port) in enumerate(eps):
+        for r in range(routers):
+            if r == er:
+                route[r, e] = ep_port
+            elif r < n_groups:  # group xbar -> uplink
+                route[r, e] = clusters_per_group
+            elif r == top:  # top xbar -> correct group downlink
+                route[r, e] = er  # group g sits on top port g
+            # repeaters handled below
+    # repeater routing: port 0 faces the group, port 1 faces the top xbar.
+    # Endpoints attached to this chain's group go toward the group; all
+    # others (other groups, HBM) go toward the top.
+    for rep in repeaters:
+        g = rep_group[rep]
+        for e, (er, _) in enumerate(eps):
+            route[rep, e] = 0 if er == g else 1
+    return Topology(
+        n_routers=routers, n_ports=Pmax, n_endpoints=Etot, link_to=link_to,
+        ep_attach=ep_attach, route=route, name="occamy",
+        meta={
+            "n_groups": n_groups, "clusters_per_group": clusters_per_group,
+            "n_clusters": n_clusters, "n_hbm": n_hbm, "spill": spill,
+            "repeaters": repeaters,
+        },
+    )

@@ -1,0 +1,34 @@
+"""Public wrapper: [B, S, H, D] layout, GQA expansion, jit, interpret off-TPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """q: [B, S, H, D]; k, v: [B, S, KV, D] (GQA broadcast if KV < H)."""
+    B, Sq, H, D = q.shape
+    KV, Dv = k.shape[2], v.shape[3]
+    interp = (not _on_tpu()) if interpret is None else interpret
+    if KV != H:
+        G = H // KV
+        k = jnp.broadcast_to(k[:, :, :, None], (B, k.shape[1], KV, G, D)).reshape(
+            B, k.shape[1], H, D)
+        v = jnp.broadcast_to(v[:, :, :, None], (B, v.shape[1], KV, G, Dv)).reshape(
+            B, v.shape[1], H, Dv)
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * H, -1, Dv)
+    o = flash_attention_bhsd(qb, kb, vb, causal=causal, block_q=block_q,
+                             block_k=block_k, interpret=interp)
+    return o.reshape(B, H, Sq, Dv).transpose(0, 2, 1, 3)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q: [BH, Sq, D]; k, v: [BH, Skv, D(v)] -> [BH, Sq, Dv]."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

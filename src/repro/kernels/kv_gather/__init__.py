@@ -1,0 +1,3 @@
+from repro.kernels.kv_gather.ops import kv_gather
+
+__all__ = ["kv_gather"]

@@ -1,0 +1,39 @@
+"""Paged KV-cache gather with scalar-prefetched page table, TPU Pallas.
+
+The serving-side analogue of the paper's multi-stream DMA: bulk data movement
+driven by an index table. ``PrefetchScalarGridSpec`` makes the page table
+available *before* tile addressing, so the BlockSpec index_map itself
+performs the indirection — each grid step DMAs one page HBM->VMEM->HBM with
+no gather compute on the core (pure data movement, like a DMA backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(table_ref, pages_ref, out_ref):
+    out_ref[...] = pages_ref[...]
+
+
+def kv_gather_paged(pages, table, *, interpret: bool = False):
+    """pages: [n_pages, page, KVD]; table: [B, max_pages] int32 page ids.
+    Returns [B, max_pages * page, KVD] (contiguous per-sequence cache)."""
+    n_pages, page, KVD = pages.shape
+    B, mp = table.shape
+    grid = (B, mp)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, page, KVD), lambda b, p, tbl: (tbl[b, p], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, page, KVD), lambda b, p, tbl: (b * mp + p, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * mp, page, KVD), pages.dtype),
+        interpret=interpret,
+    )(table, pages).reshape(B, mp * page, KVD)

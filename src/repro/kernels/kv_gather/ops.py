@@ -1,0 +1,14 @@
+"""Public wrapper for the paged KV gather."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.kv_gather.kv_gather import kv_gather_paged
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def kv_gather(pages, table, *, interpret=None):
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    return kv_gather_paged(pages, table, interpret=interp)

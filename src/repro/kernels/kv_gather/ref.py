@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the paged KV gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kv_gather_ref(pages, table):
+    """pages: [n_pages, page, KVD]; table: [B, max_pages] -> [B, mp*page, KVD]."""
+    B, mp = table.shape
+    page, KVD = pages.shape[1], pages.shape[2]
+    g = jnp.take(pages, table.reshape(-1), axis=0)  # [B*mp, page, KVD]
+    return g.reshape(B, mp * page, KVD)

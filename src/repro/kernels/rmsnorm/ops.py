@@ -1,0 +1,40 @@
+"""Public wrapper: arbitrary leading dims, jit, interpret off-TPU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_2d, rmsnorm_residual_2d
+
+
+def _interp(interpret):
+    return (jax.default_backend() != "tpu") if interpret is None else interpret
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 256, interpret=None):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    n = x2.shape[0]
+    br = block_rows
+    while n % br:
+        br //= 2
+    out = rmsnorm_2d(x2, w, eps=eps, block_rows=max(br, 1), interpret=_interp(interpret))
+    return out.reshape(shape)
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_residual(x, res, w, *, eps: float = 1e-5, block_rows: int = 256,
+                     interpret=None):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    r2 = res.reshape(-1, shape[-1])
+    n = x2.shape[0]
+    br = block_rows
+    while n % br:
+        br //= 2
+    out, new_res = rmsnorm_residual_2d(
+        x2, r2, w, eps=eps, block_rows=max(br, 1), interpret=_interp(interpret)
+    )
+    return out.reshape(shape), new_res.reshape(shape)

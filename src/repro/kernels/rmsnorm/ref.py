@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_residual_ref(x, res, w, eps: float = 1e-5):
+    s = x.astype(jnp.float32) + res.astype(jnp.float32)
+    return rmsnorm_ref(s.astype(x.dtype), w, eps), s.astype(x.dtype)

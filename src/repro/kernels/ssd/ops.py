@@ -1,0 +1,25 @@
+"""Public wrapper for the SSD kernel: [B, S, H, P] layout, jit."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd.ssd import ssd_bhqp
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, Bv, Cv, A_log, D, *, chunk: int = 128, interpret=None):
+    """x: [B, S, H, P]; dt: [B, S, H]; Bv/Cv: [B, S, N] (shared across heads);
+    A_log/D: [H]. Returns [B, S, H, P]."""
+    B, S, H, P = x.shape
+    N = Bv.shape[-1]
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    xb = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtb = dt.transpose(0, 2, 1).reshape(B * H, S)
+    Bb = jax.numpy.broadcast_to(Bv[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    Cb = jax.numpy.broadcast_to(Cv[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    Ab = jax.numpy.tile(A_log, B)
+    Db = jax.numpy.tile(D, B)
+    y = ssd_bhqp(xb, dtb, Bb, Cb, Ab, Db, chunk=chunk, interpret=interp)
+    return y.reshape(B, H, S, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: naive sequential SSM recurrence (the SSD identity)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, Bv, Cv, A_log, D):
+    """x: [BH, S, P]; dt: [BH, S]; Bv/Cv: [BH, S, N]; A_log/D: [BH]."""
+    BH, S, P = x.shape
+    N = Bv.shape[-1]
+    A = -jnp.exp(A_log.astype(jnp.float32))  # [BH]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # [BH,P], [BH], [BH,N], [BH,N]
+        a = jnp.exp(dtt * A)  # [BH]
+        state = state * a[:, None, None] + jnp.einsum(
+            "bn,bp->bnp", bt, xt * dtt[:, None]
+        )
+        y = jnp.einsum("bn,bnp->bp", ct, state)
+        return state, y
+
+    xs = (
+        x.astype(jnp.float32).swapaxes(0, 1),
+        dt.astype(jnp.float32).swapaxes(0, 1),
+        Bv.astype(jnp.float32).swapaxes(0, 1),
+        Cv.astype(jnp.float32).swapaxes(0, 1),
+    )
+    state0 = jnp.zeros((BH, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, state0, xs)
+    y = ys.swapaxes(0, 1) + x.astype(jnp.float32) * D.astype(jnp.float32)[:, None, None]
+    return y.astype(x.dtype)

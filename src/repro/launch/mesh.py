@@ -1,0 +1,22 @@
+"""Production mesh definition (assignment-fixed shapes).
+
+A function, not a module-level constant: importing this module must never
+touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_reduced_mesh(*, multi_pod: bool = False):
+    """Small mesh of the same rank for CI-scale dry-run tests (8 devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))

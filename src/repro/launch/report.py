@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json artifacts."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _fmt(x, p=3):
+    if x is None:
+        return "-"
+    if isinstance(x, float):
+        if x != 0 and abs(x) < 1e-3:
+            return f"{x:.2e}"
+        return f"{x:.{p}f}"
+    return str(x)
+
+
+def load(mesh: str = "single", variant: str | None = None):
+    rows = []
+    suffix = f"__{variant}.json" if variant else ".json"
+    for f in sorted(ART.glob(f"*__{mesh}{suffix}")):
+        if variant is None and f.stem.count("__") != 2:
+            continue
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def roofline_table(mesh: str = "single") -> str:
+    rows = load(mesh)
+    out = [
+        "| arch | shape | status | compile s | HBM/dev GB | t_comp s | t_mem s | "
+        "t_coll s | bottleneck | useful-FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP (full attention) "
+                       f"| - | - | - | - | - | - | - | - |")
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['t_compile_s']:.0f} | "
+            f"{r['memory']['peak_hbm_per_device_gb']:.1f} | "
+            f"{_fmt(rf['t_compute_s'])} | {_fmt(rf['t_memory_s'])} | "
+            f"{_fmt(rf['t_collective_s'])} | {rf['bottleneck']} | "
+            f"{_fmt(rf['useful_flops_ratio'], 2)} | {_fmt(rf['roofline_fraction'])} |"
+        )
+    return "\n".join(out)
+
+
+def dryrun_table() -> str:
+    singles = {(r["arch"], r["shape"]): r for r in load("single")}
+    multis = {(r["arch"], r["shape"]): r for r in load("multi")}
+    out = [
+        "| arch | shape | 16x16 (256) | 2x16x16 (512) | collectives (single) |",
+        "|---|---|---|---|---|",
+    ]
+    for key in sorted(singles):
+        s, m = singles[key], multis.get(key)
+        if s["status"] == "skipped":
+            out.append(f"| {key[0]} | {key[1]} | SKIP | SKIP | - |")
+            continue
+        cs = s["roofline"]["collective_counts_dynamic"]
+        cstr = ", ".join(f"{k}:{int(v)}" for k, v in sorted(cs.items()))
+        ok_m = "ok" if (m and m["status"] == "ok") else (m or {}).get("status", "?")
+        out.append(f"| {key[0]} | {key[1]} | ok ({s['t_compile_s']:.0f}s) | "
+                   f"{ok_m} ({(m or {}).get('t_compile_s', 0):.0f}s) | {cstr} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    if which == "roofline":
+        print(roofline_table())
+    elif which == "dryrun":
+        print(dryrun_table())

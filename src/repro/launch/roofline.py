@@ -1,0 +1,316 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), TPU v5e-class constants:
+  compute    = FLOPs_per_device / PEAK_FLOPS
+  memory     = HBM_bytes_per_device / HBM_BW
+  collective = collective_link_bytes_per_device / LINK_BW
+
+FLOPs/bytes: XLA's cost_analysis() counts a while (lax.scan) body ONCE, so
+for scanned models we use the analytic model (launch/flops.py — mirrors the
+compiled program incl. remat, MoE capacity padding, blocked-attention pairs);
+the raw cost_analysis numbers are recorded as a cross-check.
+
+Collectives: parsed from the compiled (post-SPMD, per-device) HLO text.
+Collectives inside while bodies are multiplied by the loop trip count,
+recovered from the while carry tuple (stacked xs/ys leading dims) matched
+against the model's known scan lengths. Ring model per op kind gives bytes
+crossing each device's link.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.launch import flops as FL
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s
+LINK_BW = 50e9  # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]"
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+# computation headers are the only non-indented lines ending with "{"
+# (instruction lines are indented; params may contain nested parens)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*->.*\{\s*$")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_WHILE_RE = re.compile(r"=\s*(\(.*?\))\s+while\(.*?body=(%?[\w.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _leading_dims(type_str: str) -> list[int]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = m.group(2)
+        if dims:
+            out.append(int(dims.split(",")[0]))
+    return out
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)  # static op counts
+    dynamic_counts: dict = field(default_factory=dict)  # x trip counts
+    bytes_by_kind: dict = field(default_factory=dict)
+    link_bytes: float = 0.0
+    while_trips: list = field(default_factory=list)  # (body, trip) for the report
+
+    def add(self, kind: str, result_bytes: int, g: int, mult: float):
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        self.dynamic_counts[kind] = self.dynamic_counts.get(kind, 0) + mult
+        if g <= 1:
+            return
+        if kind == "all-reduce":
+            moved = 2 * result_bytes * (g - 1) / g
+        elif kind == "all-gather":
+            moved = result_bytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            moved = result_bytes * (g - 1)  # result is the shard; input = g*result
+        elif kind == "all-to-all":
+            moved = result_bytes * (g - 1) / g
+        else:  # collective-permute
+            moved = result_bytes
+        moved *= mult
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + moved
+        self.link_bytes += moved
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    blocks: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(1).lstrip("%")
+            blocks[cur] = []
+        elif cur is not None:
+            blocks[cur].append(line)
+    return blocks
+
+
+def _trip_from_carry(carry_type: str, known: set[int]) -> int:
+    votes: dict[int, int] = {}
+    for d in _leading_dims(carry_type):
+        if d in known:
+            votes[d] = votes.get(d, 0) + 1
+    if not votes:
+        return 1
+    return max(votes, key=votes.get)
+
+
+def parse_collectives(
+    hlo_text: str, n_devices: int, known_lengths: set[int] | None = None
+) -> CollectiveStats:
+    known = {k for k in (known_lengths or set()) if k > 1}
+    blocks = _split_computations(hlo_text)
+
+    # while body -> (parent computation, trip); call/fusion edges: child -> parents
+    body_info: dict[str, tuple[str, int]] = {}
+    called_by: dict[str, set[str]] = {}
+    call_re = re.compile(r"(?:calls=|to_apply=)(%?[\w.\-]+)")
+    for comp, lines in blocks.items():
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                carry, body = m.group(1), m.group(2).lstrip("%")
+                body_info[body] = (comp, _trip_from_carry(carry, known))
+            for cm in call_re.finditer(line):
+                called_by.setdefault(cm.group(1).lstrip("%"), set()).add(comp)
+
+    _memo: dict[str, float] = {}
+
+    def multiplier(comp: str, depth: int = 0) -> float:
+        """Trips along the while-nesting chain; call/fusion edges inherit the
+        caller's multiplier (max over call sites)."""
+        if depth > 16:
+            return 1.0
+        if comp in _memo:
+            return _memo[comp]
+        _memo[comp] = 1.0  # break cycles
+        if comp in body_info:
+            parent, trip = body_info[comp]
+            out = trip * multiplier(parent, depth + 1)
+        else:
+            parents = called_by.get(comp, ())
+            out = max((multiplier(p, depth + 1) for p in parents), default=1.0)
+        _memo[comp] = out
+        return out
+
+    stats = CollectiveStats()
+    stats.while_trips = [(b, t) for b, (_, t) in body_info.items()]
+    for comp, lines in blocks.items():
+        mult = multiplier(comp)
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m or "-done" in line.split("=")[-1][:40]:
+                continue
+            type_str, kind, is_start = m.group(1), m.group(2), m.group(3)
+            rb = _shape_bytes(type_str)
+            if is_start:
+                rb //= 2  # start result is an (operand, result) tuple
+            stats.add(kind, rb, _group_size(line, n_devices), mult)
+    return stats
+
+
+def known_scan_lengths(cfg, shape, block_q: int = 512, block_k: int = 512) -> set[int]:
+    """Scan trip counts this (config x shape) can produce in its HLO."""
+    from repro.models.attention import _block_pairs
+
+    S = shape.seq_len // 2 if cfg.family == "encdec" else shape.seq_len
+    out: set[int] = set()
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        if cfg.local_global_period:
+            per = cfg.local_global_period
+            out |= {cfg.n_layers // per, per - 1, cfg.n_layers - (cfg.n_layers // per) * per}
+        else:
+            out |= {cfg.n_layers, cfg.n_layers - cfg.first_k_dense, cfg.first_k_dense}
+    elif fam == "ssm":
+        out |= {cfg.n_layers}
+    elif fam == "hybrid":
+        per = cfg.shared_attn_period
+        out |= {cfg.n_layers // per, per, cfg.n_layers - (cfg.n_layers // per) * per}
+    elif fam == "encdec":
+        out |= {cfg.n_enc_layers, cfg.n_dec_layers}
+    # attention pair scans (train/prefill) + ssd chunk scans
+    if not shape.is_decode and fam != "ssm":
+        bq, bk = min(block_q, S), min(block_k, S)
+        if S % bq == 0 and S % bk == 0:
+            out.add(len(_block_pairs(S // bq, S // bk, bq, bk, True, cfg.sliding_window)))
+            out.add(len(_block_pairs(S // bq, S // bk, bq, bk, True, 0)))
+            out.add(len(_block_pairs(S // bq, S // bk, bq, bk, False, 0)))
+    if fam in ("ssm", "hybrid") and not shape.is_decode:
+        out.add(max(S // min(cfg.ssm_chunk, S), 1))
+    return {k for k in out if k and k > 1}
+
+
+@dataclass
+class Roofline:
+    flops: float  # analytic, per device
+    bytes_accessed: float  # analytic, per device
+    coll: CollectiveStats
+    n_devices: int
+    model_flops: float = 0.0
+    hlo_flops_raw: float = 0.0  # cost_analysis (while bodies counted once)
+    hlo_bytes_raw: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll.link_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-based MFU bound implied by the dominant term."""
+        if self.t_bound <= 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.t_bound
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "hlo_flops_raw": self.hlo_flops_raw,
+            "hlo_bytes_raw": self.hlo_bytes_raw,
+            "collective_bytes_per_device": self.coll.link_bytes,
+            "collective_counts_static": self.coll.counts,
+            "collective_counts_dynamic": self.coll.dynamic_counts,
+            "collective_bytes_by_kind": self.coll.bytes_by_kind,
+            "while_trips": self.coll.while_trips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_per_device": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_per_device(cfg, shape, n_devices: int) -> float:
+    """6*N*D (train) / 2*N_active*D (prefill) / 2*N_active per token (decode)."""
+    from repro.models.model import count_params
+
+    n_active = count_params(cfg, active_only=True)
+    if shape.kind == "train":
+        total = 6.0 * n_active * shape.seq_len * shape.global_batch
+    elif shape.kind == "prefill":
+        total = 2.0 * n_active * shape.seq_len * shape.global_batch
+    else:
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices
+
+
+def analyze(compiled, cfg, shape, n_devices: int, *, remat: bool = True,
+            block: int = 512, cf: float = 2.0, cache_quant: bool = False) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    est = FL.estimate(cfg, shape, block=block, cf=cf, remat=remat,
+                      cache_quant=cache_quant).per_device(n_devices)
+    coll = parse_collectives(
+        compiled.as_text(), n_devices, known_scan_lengths(cfg, shape, block, block)
+    )
+    return Roofline(
+        flops=est.flops,
+        bytes_accessed=est.hbm_bytes,
+        coll=coll,
+        n_devices=n_devices,
+        model_flops=model_flops_per_device(cfg, shape, n_devices),
+        hlo_flops_raw=float(ca.get("flops", 0.0)),
+        hlo_bytes_raw=float(ca.get("bytes accessed", 0.0)),
+    )

@@ -1,0 +1,64 @@
+"""Input ShapeDtypeStruct stand-ins for every model input, per (arch x shape).
+
+Shardable, weak-type-correct, no device allocation. Also decides the serving
+sharding policy per arch (TP-only vs 2D) and the cache layout.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.spec import PSpec, struct_tree
+
+# params (bf16) bigger than this per model-shard -> also shard over data axes
+SERVE_2D_BYTES_PER_SHARD = 8e9
+
+
+def enc_dec_split(shape: ShapeConfig) -> tuple[int, int]:
+    """Split the seq budget between encoder frames and decoder tokens."""
+    s = shape.seq_len // 2
+    return s, s
+
+
+def train_input_schema(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        S_enc, S_dec = enc_dec_split(shape)
+        return {
+            "frames": PSpec((B, S_enc, cfg.d_model), ("batch", None, None)),
+            "tokens": PSpec((B, S_dec), ("batch", None), "int32", "zeros"),
+            "targets": PSpec((B, S_dec), ("batch", None), "int32", "zeros"),
+            "loss_mask": PSpec((B, S_dec), ("batch", None), "float32", "ones"),
+        }
+    sch = {
+        "tokens": PSpec((B, S), ("batch", None), "int32", "zeros"),
+        "targets": PSpec((B, S), ("batch", None), "int32", "zeros"),
+        "loss_mask": PSpec((B, S), ("batch", None), "float32", "ones"),
+    }
+    if cfg.modality == "vision" and cfg.frontend_tokens:
+        P_ = min(cfg.frontend_tokens, S)
+        sch["patch_embeds"] = PSpec((B, P_, cfg.d_model), ("batch", None, None))
+    return sch
+
+
+def decode_input_schema(cfg: ModelConfig, shape: ShapeConfig, *, seq_shard: bool,
+                        quant: bool = False) -> dict:
+    B = shape.global_batch
+    S = shape.seq_len
+    if cfg.family == "encdec":
+        S, _ = enc_dec_split(shape)
+    return {
+        "tokens": PSpec((B, 1), ("batch", None), "int32", "zeros"),
+        "cache": M.cache_schema(cfg, B, S, seq_shard=seq_shard, quant=quant),
+    }
+
+
+def serve_needs_2d(cfg: ModelConfig, n_model: int) -> bool:
+    return M.count_params(cfg) * 2 / n_model > SERVE_2D_BYTES_PER_SHARD
+
+
+def input_structs(schema) -> dict:
+    return struct_tree(schema)

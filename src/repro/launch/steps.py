@@ -1,0 +1,47 @@
+"""Jittable step functions (train / prefill / decode) built per config."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.runtime import Runtime
+
+
+def make_train_step(cfg: ModelConfig, rt: Runtime, opt_cfg: AdamWConfig | None = None,
+                    param_shardings=None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch, rt), has_aux=True
+        )(params)
+        if param_shardings is not None:
+            # pin grads to the param layout: GSPMD then reduce-scatters the
+            # (replicated-weight) cotangents instead of all-reducing them
+            grads = jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                                 param_shardings)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rt: Runtime):
+    def prefill_step(params, batch):
+        return M.prefill(cfg, params, batch, rt)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, rt: Runtime):
+    """One decode step: new token in, logits + updated cache out."""
+
+    def serve_step(params, cache, tokens):
+        return M.decode_step(cfg, params, cache, tokens, rt)
+
+    return serve_step

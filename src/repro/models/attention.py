@@ -1,0 +1,228 @@
+"""Attention: GQA / MLA / sliding-window, with a blocked "flash-style" JAX
+implementation whose HLO FLOPs are exactly triangular (causal) — important for
+honest roofline numbers — plus decode paths (single-token, split-KV).
+
+Layouts: q [B, S, H, D]; k, v [B, S, KV, D]; GQA group G = H // KV.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# Reference (naive) attention — oracle for tests, used for tiny shapes
+# ----------------------------------------------------------------------
+def _expand_kv(k, H: int):
+    """[B, S, KV, D] -> [B, S, H, D] broadcast across the GQA group dim.
+
+    Keeping heads flat (no [KV, G] split) lets GSPMD shard the H dim cleanly
+    (KV counts like 8 cannot split a 16-way axis and otherwise trigger
+    partial-group collectives inside the attention loop)."""
+    B, S, KV, D = k.shape
+    if KV == H:
+        return k
+    return jnp.broadcast_to(k[:, :, :, None], (B, S, KV, H // KV, D)).reshape(B, S, H, D)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0, scale=None):
+    B, Sq, H, D = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    Skv = k.shape[1]
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)  # right-aligned
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# Blocked flash-style attention (pure JAX, exact triangular FLOPs)
+# ----------------------------------------------------------------------
+def _block_pairs(nq: int, nk: int, bq: int, bk: int, causal: bool, window: int):
+    """Static list of (i, j) block pairs that can contain visible entries."""
+    pairs = []
+    for i in range(nq):
+        for j in range(nk):
+            q_lo, q_hi = i * bq, (i + 1) * bq - 1
+            k_lo, k_hi = j * bk, (j + 1) * bk - 1
+            if causal and k_lo > q_hi:
+                continue  # entire block strictly in the future
+            if window and k_hi < q_lo and (q_lo - k_hi) >= window:
+                # even the newest k in this block is out of the window for the
+                # oldest q -> fully masked
+                continue
+            pairs.append((i, j))
+    return pairs
+
+
+def flash_attention_jax(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    scale=None,
+):
+    """Blocked attention with online softmax. Only visible (i, j) block pairs
+    are materialized in the HLO (scan over a static pair list), so compiled
+    FLOPs match the true triangular / windowed cost.
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    Dv = v.shape[-1]
+    assert Sq == Skv or not causal, "causal path assumes aligned q/k"
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    if Sq % bq or Skv % bk:
+        # fall back for odd smoke shapes
+        return attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    nq, nk = Sq // bq, Skv // bk
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+
+    pairs = _block_pairs(nq, nk, bq, bk, causal, window)
+    ii = jnp.array([p[0] for p in pairs], jnp.int32)
+    jj = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    # blocked views: [n, B, H, blk, D] (flat heads shard cleanly over TP)
+    qb = q.reshape(B, nq, bq, H, D).transpose(1, 0, 3, 2, 4)  # [nq,B,H,bq,D]
+    kb = k.reshape(B, nk, bk, H, D).transpose(1, 0, 3, 2, 4)  # [nk,B,H,bk,D]
+    vb = v.reshape(B, nk, bk, H, Dv).transpose(1, 0, 3, 2, 4)
+
+    m0 = jnp.full((nq, B, H, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, B, H, bq), jnp.float32)
+    o0 = jnp.zeros((nq, B, H, bq, Dv), jnp.float32)
+
+    qoff = jnp.arange(bq, dtype=jnp.int32)
+    koff = jnp.arange(bk, dtype=jnp.int32)
+
+    def step(carry, idx):
+        m, l, o = carry
+        i, j = idx
+        qi = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+        s = jnp.einsum(
+            "bhqd,bhkd->bhqk", qi.astype(jnp.float32), kj.astype(jnp.float32)
+        ) * scale  # [B,H,bq,bk]
+        qpos = (i * bq + qoff)[:, None]
+        kpos = (j * bk + koff)[None, :]
+        ok = jnp.ones((bq, bk), bool)
+        if causal:
+            ok &= qpos >= kpos
+        if window:
+            ok &= (qpos - kpos) < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        mi = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        oi = jax.lax.dynamic_index_in_dim(o, i, 0, keepdims=False)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(mi, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(mi - m_new)
+        l_new = li * alpha + jnp.sum(p, axis=-1)
+        o_new = oi * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vj.astype(jnp.float32))
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        o = jax.lax.dynamic_update_index_in_dim(o, o_new, i, 0)
+        return (m, l, o), None
+
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0), (ii, jj))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    out = o.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, impl="flash", block_q=512, block_k=512):
+    if impl == "naive" or q.shape[1] <= 256:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention_jax(
+        q, k, v, causal=causal, window=window, block_q=block_q, block_k=block_k
+    )
+
+
+# ----------------------------------------------------------------------
+# Decode attention (one new token against a cache)
+# ----------------------------------------------------------------------
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0, scale=None,
+                     ring: bool = False):
+    """q: [B, 1, H, D]; caches: [B, S, KV, D]; cache_len: [B] int32 (valid prefix,
+    includes the current token already written at cache_len-1).
+
+    ring=True: cache is a ring buffer of size S (sliding window) — all entries
+    with kpos < cache_len are valid (softmax is permutation-invariant)."""
+    B, _, H, D = q.shape
+    S = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    k_cache = _expand_kv(k_cache, H)
+    v_cache = _expand_kv(v_cache, H)
+    s = jnp.einsum(
+        "bhd,bkhd->bhk", q.astype(jnp.float32)[:, 0], k_cache.astype(jnp.float32)
+    ) * scale  # [B,H,S]
+    kpos = jnp.arange(S, dtype=jnp.int32)[None, :]  # [1,S]
+    if ring:
+        # ring slot i holds some absolute position congruent to i (mod S);
+        # valid once written: slot < cache_len (first wrap fills all slots)
+        valid = kpos < cache_len[:, None]
+    else:
+        valid = kpos < cache_len[:, None]
+        if window:
+            valid &= kpos >= (cache_len[:, None] - window)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p, v_cache.astype(jnp.float32))
+    return o[:, None].astype(q.dtype)
+
+
+def decode_attention_partial(q, k_cache, v_cache, valid_mask, *, scale=None):
+    """Partial (split-KV) decode attention over a local cache shard.
+
+    Returns (m, l, o) so shards can be combined with a log-sum-exp merge —
+    the FlooNoC 'endpoint ordering' idea: shards return out-of-order partials,
+    the combine at the endpoint restores the final result.
+      q: [B, H, D]; caches [B, Sloc, KV, D]; valid_mask [B, Sloc] bool.
+    Out: m, l: [B, H]; o: [B, H, Dv] (f32).
+    """
+    B, H, D = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    k_cache = _expand_kv(k_cache, H)
+    v_cache = _expand_kv(v_cache, H)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), k_cache.astype(jnp.float32)) * scale
+    s = jnp.where(valid_mask[:, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # [B,H]
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid_mask[:, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p, v_cache.astype(jnp.float32))
+    return m, l, o
+
+
+def combine_partials(m, l, o, axis_name: str):
+    """Merge split-KV partials across a mesh axis (inside shard_map)."""
+    m_max = jax.lax.pmax(m, axis_name)  # [B,H]
+    corr = jnp.exp(m - m_max)
+    l_sum = jax.lax.psum(l * corr, axis_name)
+    o_sum = jax.lax.psum(o * corr[..., None], axis_name)
+    return o_sum / jnp.maximum(l_sum[..., None], 1e-30)

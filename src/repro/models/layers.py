@@ -1,0 +1,114 @@
+"""Shared layers: norms, rotary embeddings (RoPE / M-RoPE), MLPs, embedding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.spec import PSpec
+
+
+# ----------------------------------------------------------------------
+# RMSNorm
+# ----------------------------------------------------------------------
+def rmsnorm_schema(d: int) -> dict:
+    return {"scale": PSpec((d,), ("embed",), "float32", "ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Rotary position embeddings
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, [head_dim//2] (f32)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: [..., S] int32. Pairs are (even, odd) split-half."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, d/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # [..., S, 1, d/2]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, sections: tuple[int, ...], theta: float
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL). positions3: [..., S, 3] (t, h, w).
+
+    The head_dim//2 frequency slots are partitioned into ``sections``; slot
+    group ``i`` rotates by position component ``i`` (text: t == h == w).
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # [d/2]
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=d // 2
+    )  # [d/2] static
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, positions3.shape[:-1] + (d // 2,)).astype(jnp.int32),
+        axis=-1,
+    )  # [..., S, d/2]
+    ang = pos * inv
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_for(cfg: ModelConfig, tokens_shape, offset=0):
+    """Default positions: [B, S] (or [B, S, 3] for mrope)."""
+    B, S = tokens_shape
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.rope_kind == "mrope":
+        return jnp.broadcast_to(pos[..., None], (B, S, 3))
+    return pos
+
+
+# ----------------------------------------------------------------------
+# SwiGLU MLP
+# ----------------------------------------------------------------------
+def mlp_schema(d: int, ff: int) -> dict:
+    return {
+        "w1": PSpec((d, ff), ("embed", "mlp"), init="scaled:0"),
+        "w3": PSpec((d, ff), ("embed", "mlp"), init="scaled:0"),
+        "w2": PSpec((ff, d), ("mlp", "embed"), init="scaled:0"),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+# ----------------------------------------------------------------------
+# Embedding / unembedding
+# ----------------------------------------------------------------------
+def embed_schema(cfg: ModelConfig) -> dict:
+    return {"embedding": PSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"))}
+
+
+def embed(p, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed(p, x):
+    # tied embeddings: logits = x @ E^T. bf16 inputs + f32 accumulation gives
+    # stable-softmax f32 logits while keeping the *cotangents* bf16 — an f32
+    # residual cotangent would double every backward collective/HBM transfer
+    return jnp.einsum(
+        "bsd,vd->bsv", x, p["embedding"], preferred_element_type=jnp.float32
+    )

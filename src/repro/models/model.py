@@ -1,0 +1,480 @@
+"""Model assembly: one ``param_schema`` / ``forward`` / ``prefill`` /
+``decode_step`` per architecture family, driven entirely by ``ModelConfig``.
+
+Families: dense (incl. local:global + M-RoPE/vision stub), moe (llama4,
+deepseek-v2/MLA), ssm (mamba2), hybrid (zamba2), encdec (seamless).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.layers import embed, embed_schema, positions_for, rmsnorm, rmsnorm_schema, unembed
+from repro.models.spec import PSpec, count_params_tree, init_tree, struct_tree
+from repro.models.transformer import (
+    Ctx,
+    dense_block,
+    dense_block_schema,
+    encdec_dec_block,
+    encdec_dec_block_schema,
+    moe_layer_block,
+    moe_layer_schema,
+    scan_stack,
+    ssm_block,
+    ssm_block_schema,
+    stack_schema,
+    tree_add,
+)
+from repro.runtime import Runtime
+
+MOE_AUX_COEF = 0.01
+ROUTER_Z_COEF = 1e-3
+MAX_ENC_POS = 16_384
+
+
+# ======================================================================
+# Schema
+# ======================================================================
+def param_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    sch: dict[str, Any] = {
+        "embed": embed_schema(cfg),
+        "final_norm": rmsnorm_schema(d),
+    }
+    fam = cfg.family
+    if fam == "dense":
+        if cfg.local_global_period:
+            per = cfg.local_global_period
+            n_super = cfg.n_layers // per
+            trailing = cfg.n_layers - n_super * per
+            sch["superblocks"] = stack_schema(
+                {
+                    "local": stack_schema(dense_block_schema(cfg), per - 1),
+                    "global": dense_block_schema(cfg),
+                },
+                n_super,
+            )
+            if trailing:
+                sch["trailing"] = stack_schema(dense_block_schema(cfg), trailing)
+        else:
+            sch["blocks"] = stack_schema(
+                dense_block_schema(cfg, attn=cfg.attn_kind), cfg.n_layers
+            )
+        if cfg.modality == "vision":
+            sch["patch_proj"] = PSpec((d, d), ("embed_in", "embed"), init="scaled:0")
+    elif fam == "moe":
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        if cfg.first_k_dense:
+            sch["dense_blocks"] = stack_schema(
+                dense_block_schema(cfg, attn=cfg.attn_kind), cfg.first_k_dense
+            )
+        sch["blocks"] = stack_schema(moe_layer_schema(cfg), n_moe)
+    elif fam == "ssm":
+        sch["blocks"] = stack_schema(ssm_block_schema(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        per = cfg.shared_attn_period
+        n_super = cfg.n_layers // per
+        trailing = cfg.n_layers - n_super * per
+        sch["superblocks"] = stack_schema(stack_schema(ssm_block_schema(cfg), per), n_super)
+        sch["shared_attn"] = dense_block_schema(cfg)  # tied weights (one copy)
+        if trailing:
+            sch["trailing"] = stack_schema(ssm_block_schema(cfg), trailing)
+    elif fam == "encdec":
+        sch["frame_proj"] = PSpec((d, d), ("embed_in", "embed"), init="scaled:0")
+        sch["enc_pos"] = PSpec((MAX_ENC_POS, d), (None, "embed"), scale=0.01)
+        sch["dec_pos"] = PSpec((MAX_ENC_POS, d), (None, "embed"), scale=0.01)
+        sch["enc_blocks"] = stack_schema(dense_block_schema(cfg), cfg.n_enc_layers)
+        sch["dec_blocks"] = stack_schema(encdec_dec_block_schema(cfg), cfg.n_dec_layers)
+        sch["enc_final_norm"] = rmsnorm_schema(d)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return sch
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    total = count_params_tree(param_schema(cfg))
+    if active_only and cfg.family == "moe":
+        d, ff = cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        routed = 3 * cfg.n_experts * d * ff * n_moe
+        active = routed * cfg.moe_top_k / cfg.n_experts
+        total = total - routed + int(active)
+    return total
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    return init_tree(param_schema(cfg), key)
+
+
+def param_structs(cfg: ModelConfig) -> dict:
+    return struct_tree(param_schema(cfg))
+
+
+# ======================================================================
+# Forward (train / prefill)
+# ======================================================================
+def _mrope_positions(cfg: ModelConfig, B: int, S: int):
+    """[B, S, 3] (t, h, w): grid positions for the leading patch tokens, then text."""
+    P = min(cfg.frontend_tokens, S)
+    g = max(int(math.sqrt(P)), 1)
+    i = jnp.arange(S)
+    is_patch = i < P
+    t = jnp.where(is_patch, 0, i - P + g)
+    h = jnp.where(is_patch, i // g, i - P + g)
+    w = jnp.where(is_patch, i % g, i - P + g)
+    pos = jnp.stack([t, h, w], -1).astype(jnp.int32)
+    return jnp.broadcast_to(pos[None], (B, S, 3))
+
+
+def _embed_input(cfg: ModelConfig, p, batch):
+    """Token (+ modality-stub) embedding. Returns (x, pos)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(p["embed"], tokens)
+    if cfg.modality == "vision" and "patch_embeds" in batch:
+        P = batch["patch_embeds"].shape[1]
+        pe = batch["patch_embeds"] @ p["patch_proj"]
+        x = jnp.concatenate([pe, x[:, P:]], axis=1)
+    if cfg.rope_kind == "mrope":
+        pos = _mrope_positions(cfg, B, S)
+    else:
+        pos = positions_for(cfg, (B, S))
+    return x, pos
+
+
+def _run_lm_stacks(cfg: ModelConfig, p, x, ctx: Ctx, caches=None):
+    """Run the layer stacks for decoder-only families.
+
+    caches: pytree mirroring the stack structure (or None). Returns
+    (x, new_caches, aux)."""
+    fam = cfg.family
+    aux = None
+    new_caches: dict[str, Any] = {}
+    c = caches or {}
+
+    if fam == "dense" and cfg.local_global_period:
+        w = cfg.sliding_window
+
+        def super_body(x, xs):
+            sp, scache = xs
+            x, lc, _ = scan_stack(
+                partial(dense_block, window=w, ring=ctx.mode != "train"),
+                sp["local"], x, ctx,
+                stacked_cache=None if scache is None else scache["local"],
+            )
+            x, gc, _ = dense_block(sp["global"], x,
+                                   None if scache is None else scache["global"], ctx)
+            return x, {"local": lc, "global": gc}
+
+        xs = (p["superblocks"], c.get("superblocks"))
+        if ctx.mode == "train" and ctx.rt.remat:
+            super_body = jax.checkpoint(
+                super_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        x, sc = jax.lax.scan(super_body, x, xs)
+        new_caches["superblocks"] = sc
+        if "trailing" in p:
+            x, tc, _ = scan_stack(
+                partial(dense_block, window=w, ring=ctx.mode != "train"),
+                p["trailing"], x, ctx, stacked_cache=c.get("trailing"),
+            )
+            new_caches["trailing"] = tc
+    elif fam == "dense":
+        x, bc, _ = scan_stack(
+            partial(dense_block, attn_kind=cfg.attn_kind),
+            p["blocks"], x, ctx, stacked_cache=c.get("blocks"),
+        )
+        new_caches["blocks"] = bc
+    elif fam == "moe":
+        if cfg.first_k_dense:
+            x, dc, _ = scan_stack(
+                partial(dense_block, attn_kind=cfg.attn_kind),
+                p["dense_blocks"], x, ctx, stacked_cache=c.get("dense_blocks"),
+            )
+            new_caches["dense_blocks"] = dc
+        x, bc, aux = scan_stack(
+            moe_layer_block, p["blocks"], x, ctx, stacked_cache=c.get("blocks")
+        )
+        new_caches["blocks"] = bc
+    elif fam == "ssm":
+        x, bc, _ = scan_stack(ssm_block, p["blocks"], x, ctx, stacked_cache=c.get("blocks"))
+        new_caches["blocks"] = bc
+    elif fam == "hybrid":
+
+        def super_body(x, xs):
+            sp, scache = xs
+            ssm_c = None if scache is None else scache["ssm"]
+            x, sc_new, _ = scan_stack(ssm_block, sp, x, ctx, stacked_cache=ssm_c)
+            attn_c = None if scache is None else scache["attn"]
+            x, ac_new, _ = dense_block(p["shared_attn"], x, attn_c, ctx)
+            return x, {"ssm": sc_new, "attn": ac_new}
+
+        xs = (p["superblocks"], c.get("superblocks"))
+        if ctx.mode == "train" and ctx.rt.remat:
+            super_body = jax.checkpoint(
+                super_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        x, sc = jax.lax.scan(super_body, x, xs)
+        new_caches["superblocks"] = sc
+        if "trailing" in p:
+            x, tc, _ = scan_stack(ssm_block, p["trailing"], x, ctx,
+                                  stacked_cache=c.get("trailing"))
+            new_caches["trailing"] = tc
+    else:
+        raise ValueError(fam)
+    return x, new_caches, aux
+
+
+def _encdec_encode(cfg: ModelConfig, p, frames, rt: Runtime, mode: str):
+    B, S_enc, _ = frames.shape
+    h = frames.astype(p["frame_proj"].dtype) @ p["frame_proj"]
+    h = h + p["enc_pos"][:S_enc][None]
+    # encoder never caches (bidirectional, single pass)
+    ctx_enc = Ctx(cfg=cfg, rt=rt, mode="train",
+                  pos=positions_for(cfg, (B, S_enc)), causal=False)
+    h, _, _ = scan_stack(dense_block, p["enc_blocks"], h, ctx_enc)
+    return rmsnorm(p["enc_final_norm"], h, cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, p, batch, rt: Runtime, mode: str = "train"):
+    """Teacher-forced forward. Returns (logits [B,S,V], caches, aux)."""
+    if cfg.family == "encdec":
+        enc_out = _encdec_encode(cfg, p, batch["frames"], rt, mode)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed(p["embed"], tokens) + p["dec_pos"][:S][None]
+        enc_len = batch.get("enc_len")
+        if enc_len is None:
+            enc_len = jnp.full((B,), enc_out.shape[1], jnp.int32)
+        ctx = Ctx(cfg=cfg, rt=rt, mode=mode, pos=positions_for(cfg, (B, S)),
+                  enc_out=enc_out, enc_len=enc_len)
+        x, bc, _ = scan_stack(encdec_dec_block, p["dec_blocks"], x, ctx)
+        x = rmsnorm(p["final_norm"], x, cfg.norm_eps)
+        logits = unembed(p["embed"], x)
+        caches = {"dec_blocks": bc, "enc_out": enc_out} if mode == "prefill" else None
+        return logits, caches, None
+
+    x, pos = _embed_input(cfg, p, batch)
+    x = tfm._cb(x, rt)
+    ctx = Ctx(cfg=cfg, rt=rt, mode=mode, pos=pos)
+    x, caches, aux = _run_lm_stacks(cfg, p, x, ctx)
+    x = rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    logits = tfm._cb(unembed(p["embed"], x), rt, ("batch", None, "vocab"))
+    return logits, (caches if mode == "prefill" else None), aux
+
+
+# ======================================================================
+# Loss
+# ======================================================================
+def loss_fn(cfg: ModelConfig, p, batch, rt: Runtime):
+    logits, _, aux = forward(cfg, p, batch, rt, mode="train")
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    # z-loss stabilizes the f32 softmax at scale
+    zl = ((jax.nn.logsumexp(logits, axis=-1) ** 2) * mask).sum() / denom
+    loss = ce + 1e-4 * zl
+    metrics = {"ce": ce, "z_loss": zl}
+    if aux is not None:
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        lb = aux["lb_loss"] / max(n_moe, 1)
+        rz = aux["router_z"] / max(n_moe, 1)
+        loss = loss + MOE_AUX_COEF * lb + ROUTER_Z_COEF * rz
+        metrics.update(
+            lb_loss=lb, router_z=rz, dropped_frac=aux["dropped_frac"] / max(n_moe, 1)
+        )
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ======================================================================
+# KV / state cache schema + decode
+# ======================================================================
+def cache_schema(cfg: ModelConfig, B: int, S: int, *, seq_shard: bool = False,
+                 quant: bool = False) -> dict:
+    """PSpec tree mirroring what prefill/decode produce. S = max context.
+
+    quant: int8 KV values + per-token-per-head f32 scales (GQA caches only)."""
+    seq_axis = "seq_shard" if seq_shard else None
+    KV, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    fam = cfg.family
+
+    def kv(n_layers, s, sa=seq_axis):
+        dt = "int8" if quant else "bfloat16"
+        out = {
+            "k": PSpec((n_layers, B, s, KV, D), ("layers", "batch", sa, "kv_heads", None), dt),
+            "v": PSpec((n_layers, B, s, KV, D), ("layers", "batch", sa, "kv_heads", None), dt),
+        }
+        if quant:
+            ax = ("layers", "batch", sa, "kv_heads")
+            out["k_scale"] = PSpec((n_layers, B, s, KV), ax, "float32")
+            out["v_scale"] = PSpec((n_layers, B, s, KV), ax, "float32")
+        return out
+
+    def ssm_cache(*lead_dims):
+        _, H, P_, N = ssm_mod.ssm_dims(cfg)
+        W = cfg.ssm_conv_width
+        lead_ax = ("layers", "layers2")[: len(lead_dims)]
+        return {
+            "state": PSpec(lead_dims + (B, H, P_, N), lead_ax + ("batch", "ssm_heads", None, None), "float32", "zeros"),
+            "conv": {
+                "x": PSpec(lead_dims + (B, W - 1, H, P_), lead_ax + ("batch", None, "ssm_heads", None), "bfloat16", "zeros"),
+                "B": PSpec(lead_dims + (B, W - 1, cfg.ssm_state), lead_ax + ("batch", None, None), "bfloat16", "zeros"),
+                "C": PSpec(lead_dims + (B, W - 1, cfg.ssm_state), lead_ax + ("batch", None, None), "bfloat16", "zeros"),
+            },
+        }
+
+    sch: dict[str, Any] = {"len": PSpec((B,), ("batch",), "int32", "zeros")}
+    if fam == "dense" and cfg.local_global_period:
+        per = cfg.local_global_period
+        n_super = cfg.n_layers // per
+        trailing = cfg.n_layers - n_super * per
+        W = min(cfg.sliding_window, S)
+        sch["superblocks"] = {
+            "local": kv_nested(n_super, per - 1, B, W, KV, D, None),
+            "global": kv(n_super, S),
+        }
+        if trailing:
+            sch["trailing"] = kv(trailing, W, None)
+    elif fam in ("dense", "moe"):
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        if cfg.attn_kind == "mla":
+            kl, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+            mla = {
+                "ckv": PSpec((n_moe, B, S, kl), ("layers", "batch", seq_axis, None)),
+                "krope": PSpec((n_moe, B, S, dr), ("layers", "batch", seq_axis, None)),
+            }
+            sch["blocks"] = mla
+            if cfg.first_k_dense:
+                sch["dense_blocks"] = {
+                    "ckv": PSpec((cfg.first_k_dense, B, S, kl), ("layers", "batch", seq_axis, None)),
+                    "krope": PSpec((cfg.first_k_dense, B, S, dr), ("layers", "batch", seq_axis, None)),
+                }
+        else:
+            sch["blocks"] = kv(cfg.n_layers - cfg.first_k_dense, S)
+            if cfg.first_k_dense:
+                sch["dense_blocks"] = kv(cfg.first_k_dense, S)
+    elif fam == "ssm":
+        sch["blocks"] = ssm_cache(cfg.n_layers)
+    elif fam == "hybrid":
+        per = cfg.shared_attn_period
+        n_super = cfg.n_layers // per
+        trailing = cfg.n_layers - n_super * per
+        sch["superblocks"] = {"ssm": ssm_cache(n_super, per), "attn": kv(n_super, S)}
+        if trailing:
+            sch["trailing"] = ssm_cache(trailing)
+    elif fam == "encdec":
+        S_dec, S_enc = S, S
+        sch["dec_blocks"] = {
+            "k": PSpec((cfg.n_dec_layers, B, S_dec, KV, D), ("layers", "batch", seq_axis, "kv_heads", None)),
+            "v": PSpec((cfg.n_dec_layers, B, S_dec, KV, D), ("layers", "batch", seq_axis, "kv_heads", None)),
+            "ck": PSpec((cfg.n_dec_layers, B, S_enc, KV, D), ("layers", "batch", seq_axis, "kv_heads", None)),
+            "cv": PSpec((cfg.n_dec_layers, B, S_enc, KV, D), ("layers", "batch", seq_axis, "kv_heads", None)),
+        }
+        sch["enc_out"] = PSpec((B, S_enc, cfg.d_model), ("batch", seq_axis, None))
+        sch["enc_len"] = PSpec((B,), ("batch",), "int32", "zeros")
+    return sch
+
+
+def kv_nested(n_super, n_local, B, W, KV, D, seq_axis):
+    return {
+        "k": PSpec((n_super, n_local, B, W, KV, D),
+                   ("layers", "layers2", "batch", seq_axis, "kv_heads", None)),
+        "v": PSpec((n_super, n_local, B, W, KV, D),
+                   ("layers", "layers2", "batch", seq_axis, "kv_heads", None)),
+    }
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int, *, seq_shard: bool = False):
+    return init_tree(cache_schema(cfg, B, S, seq_shard=seq_shard), jax.random.key(0))
+
+
+def cache_structs(cfg: ModelConfig, B: int, S: int, *, seq_shard: bool = False):
+    return struct_tree(cache_schema(cfg, B, S, seq_shard=seq_shard))
+
+
+def decode_step(cfg: ModelConfig, p, cache, tokens, rt: Runtime):
+    """One decode step. tokens: [B, 1]. Returns (logits [B,1,V], new_cache)."""
+    B = tokens.shape[0]
+    posB = cache["len"]  # [B] current length == write position
+    if cfg.family == "encdec":
+        x = embed(p["embed"], tokens) + jnp.take(p["dec_pos"], posB, axis=0)[:, None]
+        ctx = Ctx(cfg=cfg, rt=rt, mode="decode", pos=posB, enc_len=cache["enc_len"])
+        x, bc, _ = scan_stack(encdec_dec_block, p["dec_blocks"], x, ctx,
+                              stacked_cache=cache["dec_blocks"])
+        x = rmsnorm(p["final_norm"], x, cfg.norm_eps)
+        logits = unembed(p["embed"], x)
+        new_cache = dict(cache)
+        new_cache.update(dec_blocks=bc, len=posB + 1)
+        return logits, new_cache
+
+    x = embed(p["embed"], tokens)
+    rope_pos = None
+    if cfg.rope_kind == "mrope" and cfg.frontend_tokens:
+        # text positions run behind slots by (P - grid) due to the patch grid
+        P_ = cfg.frontend_tokens
+        g = max(int(math.sqrt(P_)), 1)
+        rope_pos = posB - P_ + g
+    ctx = Ctx(cfg=cfg, rt=rt, mode="decode", pos=posB, rope_pos=rope_pos)
+    stacks = {k: v for k, v in cache.items() if k != "len"}
+    x, new_stacks, _ = _run_lm_stacks(cfg, p, x, ctx, caches=stacks)
+    x = rmsnorm(p["final_norm"], x, cfg.norm_eps)
+    logits = unembed(p["embed"], x)
+    new_cache = dict(new_stacks)
+    new_cache["len"] = posB + 1
+    return logits, new_cache
+
+
+def pad_cache(cfg: ModelConfig, cache, extra: int):
+    """Grow the sequence dim of KV caches by `extra` decode slots (prefill
+    sizes caches to the prompt; ring/SSM caches are fixed-size)."""
+    if extra <= 0:
+        return cache
+
+    def grow(path, x):
+        key = jax.tree_util.keystr(path)
+        if "conv" in key or "'state'" in key:
+            return x
+        is_kv = key.rstrip("]").endswith(("'k'", "'v'"))
+        is_mla = "'ckv'" in key or "'krope'" in key
+        if not (is_kv or is_mla):
+            return x
+        if cfg.local_global_period and ("'local'" in key or "'trailing'" in key):
+            return x  # sliding-window ring: fixed size
+        pad = [(0, 0)] * x.ndim
+        pad[x.ndim - 3 if is_kv else x.ndim - 2] = (0, extra)
+        return jnp.pad(x, pad)
+
+    return jax.tree_util.tree_map_with_path(grow, cache)
+
+
+def prefill(cfg: ModelConfig, p, batch, rt: Runtime, *, pad_to: int = 0):
+    """Prefill: forward with cache construction. Returns (logits, cache).
+
+    pad_to: total cache capacity (prompt + decode head-room); 0 = prompt only.
+    """
+    logits, caches, _ = forward(cfg, p, batch, rt, mode="prefill")
+    B = batch["tokens"].shape[0]
+    S = batch["tokens"].shape[1]
+    cache = dict(caches or {})
+    cache["len"] = jnp.full((B,), S, jnp.int32)
+    if cfg.family == "encdec":
+        cache["enc_len"] = jnp.full((B,), cache["enc_out"].shape[1], jnp.int32)
+        S = S  # decoder prompt length == tokens length
+    cache = pad_cache(cfg, cache, pad_to - S)
+    return logits, cache

@@ -1,0 +1,76 @@
+"""Parameter schema plumbing.
+
+A model is described once as a pytree of ``PSpec`` (shape + logical axes +
+init). From that single source of truth we derive:
+  * ``init_tree``      — materialized random params (smoke tests / examples)
+  * ``struct_tree``    — ShapeDtypeStructs (dry-run lowering, no allocation)
+  * ``sharding_tree``  — NamedShardings via logical-axis rules (sharding/partition.py)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+DTYPES = {
+    "bfloat16": jnp.bfloat16,
+    "float32": jnp.float32,
+    "int32": jnp.int32,
+    "int8": jnp.int8,
+}
+
+
+class PSpec(NamedTuple):
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]  # logical axis name (str) or None, one per dim
+    dtype: str = "bfloat16"
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "scaled:<fan_in_dim>"
+    scale: float = 0.02
+
+    def nbytes(self) -> int:
+        return math.prod(self.shape) * jnp.dtype(DTYPES[self.dtype]).itemsize
+
+
+def is_pspec(x: Any) -> bool:
+    return isinstance(x, PSpec)
+
+
+def tree_map_specs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_pspec)
+
+
+def struct_tree(schema):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, DTYPES[s.dtype]), schema
+    )
+
+
+def count_params_tree(schema) -> int:
+    total = 0
+    for s in jax.tree.leaves(schema, is_leaf=is_pspec):
+        total += math.prod(s.shape)
+    return total
+
+
+def _init_leaf(spec: PSpec, key) -> jax.Array:
+    dt = DTYPES[spec.dtype]
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init.startswith("scaled"):
+        # variance-scaled: 1/sqrt(fan_in); fan_in = shape[dim] (default -2 ... use
+        # second-to-last for matmul weights, last-dim output convention [in, out])
+        fan_in = spec.shape[int(spec.init.split(":")[1])] if ":" in spec.init else spec.shape[-2]
+        return (jax.random.normal(key, spec.shape, jnp.float32) / math.sqrt(fan_in)).astype(dt)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * spec.scale).astype(dt)
+
+
+def init_tree(schema, key):
+    """Materialize a schema with per-leaf folded keys (path-stable)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_pspec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    vals = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)

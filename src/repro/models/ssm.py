@@ -1,0 +1,229 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD for train/prefill (quadratic intra-chunk + linear cross-chunk
+recurrence), O(1)-state recurrent step for decode. Heads are sharded over the
+``model`` axis when divisible (zamba2: 112 heads), else replicated (mamba2-130m).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.spec import PSpec
+
+
+def ssm_dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P_ = cfg.ssm_head_dim
+    H = d_inner // P_
+    N = cfg.ssm_state
+    return d_inner, H, P_, N
+
+
+def ssm_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    _, H, P_, N = ssm_dims(cfg)
+    W = cfg.ssm_conv_width
+    return {
+        "wz": PSpec((d, H, P_), ("embed", "ssm_heads", None), init="scaled:0"),
+        "wx": PSpec((d, H, P_), ("embed", "ssm_heads", None), init="scaled:0"),
+        "wB": PSpec((d, N), ("embed", None), init="scaled:0"),
+        "wC": PSpec((d, N), ("embed", None), init="scaled:0"),
+        "wdt": PSpec((d, H), ("embed", "ssm_heads"), init="scaled:0"),
+        "dt_bias": PSpec((H,), ("ssm_heads",), "float32", "zeros"),
+        "A_log": PSpec((H,), ("ssm_heads",), "float32", "zeros"),
+        "D": PSpec((H,), ("ssm_heads",), "float32", "ones"),
+        "conv_x": PSpec((W, H, P_), (None, "ssm_heads", None), init="normal"),
+        "conv_B": PSpec((W, N), (None, None), init="normal"),
+        "conv_C": PSpec((W, N), (None, None), init="normal"),
+        "norm": PSpec((H, P_), ("ssm_heads", None), "float32", "ones"),
+        "wo": PSpec((H, P_, d), ("ssm_heads", None, "embed"), init="scaled:1"),
+    }
+
+
+def _causal_conv(x, kernel, prefix=None):
+    """Depthwise causal conv over axis 1. x: [B, S, ...ch], kernel: [W, ...ch].
+
+    prefix: [B, W-1, ...ch] previous raw inputs (decode/chunked prefill), else zeros.
+    """
+    W = kernel.shape[0]
+    if prefix is None:
+        pad = [(0, 0)] * x.ndim
+        pad[1] = (W - 1, 0)
+        xp = jnp.pad(x, pad)
+    else:
+        xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for w in range(W):
+        out = out + xp[:, w : w + S].astype(jnp.float32) * kernel[w].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _project(p, u):
+    """u: [B, S, d] -> z, x, Bv, Cv, dt (pre-conv, pre-activation)."""
+    z = jnp.einsum("bsd,dhp->bshp", u, p["wz"])
+    x = jnp.einsum("bsd,dhp->bshp", u, p["wx"])
+    Bv = u @ p["wB"]  # [B,S,N]
+    Cv = u @ p["wC"]
+    dt = jnp.einsum("bsd,dh->bsh", u, p["wdt"]).astype(jnp.float32)
+    return z, x, Bv, Cv, dt
+
+
+def _gated_out(p, y, z, eps):
+    """Gated RMSNorm + output projection. y, z: [B, S, H, P]."""
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + eps) * p["norm"]
+    return jnp.einsum("bshp,hpd->bsd", y.astype(z.dtype), p["wo"])
+
+
+def ssd_chunked(x, dt, A_log, Bv, Cv, D, chunk: int, state_init=None):
+    """SSD scan. x: [B,S,H,P]; dt: [B,S,H] (post-softplus); Bv/Cv: [B,S,N].
+
+    Returns (y [B,S,H,P] f32, final_state [B,H,P,N] f32).
+    """
+    Bt, S, H, P_ = x.shape
+    N = Bv.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        # zero-pad the tail: dt=0 gives decay exp(0)=1 and zero contribution,
+        # so outputs and the final state are exact
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bv = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0)))
+        Cv = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nC = S // Q
+
+    A = -jnp.exp(A_log.astype(jnp.float32))  # [H]
+    xf = x.astype(jnp.float32).reshape(Bt, nC, Q, H, P_)
+    dtc = dt.reshape(Bt, nC, Q, H)
+    Bc = Bv.astype(jnp.float32).reshape(Bt, nC, Q, N)
+    Cc = Cv.astype(jnp.float32).reshape(Bt, nC, Q, N)
+
+    ldt = dtc * A  # [b,c,q,h] log-decay per step (negative)
+    cs = jnp.cumsum(ldt, axis=2)  # inclusive cumulative log decay
+    cs_total = cs[:, :, -1, :]  # [b,c,h]
+
+    # --- intra-chunk (quadratic within chunk) ---
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # [b,c,Q,Q]
+    dec = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # [b,c,i,j,h]
+    iq = jnp.arange(Q)
+    causal = iq[:, None] >= iq[None, :]
+    dec = jnp.where(causal[None, None, :, :, None], jnp.exp(dec), 0.0)
+    M = CB[..., None] * dec * dtc[:, :, None, :, :]  # [b,c,i,j,h]; dt indexed by j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xf)
+
+    # --- chunk states ---
+    w = jnp.exp(cs_total[:, :, None, :] - cs) * dtc  # [b,c,q,h]
+    xw = xf * w[..., None]
+    S_chunk = jnp.einsum("bcjn,bcjhp->bchpn", Bc, xw)  # [b,c,H,P,N]
+
+    # --- cross-chunk recurrence ---
+    if state_init is None:
+        state_init = jnp.zeros((Bt, H, P_, N), jnp.float32)
+
+    def scanf(s, inp):
+        s_c, g = inp  # g: [b,h] total chunk decay
+        s_out = s  # state *entering* this chunk
+        s = s * jnp.exp(g)[:, :, None, None] + s_c
+        return s, s_out
+
+    S_chunks_T = jnp.moveaxis(S_chunk, 1, 0)  # [c,b,H,P,N]
+    g_T = jnp.moveaxis(cs_total, 1, 0)  # [c,b,h]
+    final_state, S_prev = jax.lax.scan(scanf, state_init, (S_chunks_T, g_T))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)  # [b,c,H,P,N] state entering chunk c
+
+    # --- inter-chunk contribution ---
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Cc, S_prev) * jnp.exp(cs)[..., None]
+    y = y_intra + y_inter
+    y = y + xf * D.astype(jnp.float32)[None, None, None, :, None]
+    return y.reshape(Bt, S, H, P_)[:, :S_orig], final_state
+
+
+def mamba2_block(p, u, *, cfg: ModelConfig, cache=None, return_cache: bool = False):
+    """Full Mamba2 mixer for train/prefill. u: [B, S, d].
+
+    cache (optional): {"state": [B,H,P,N] f32, "conv": {x,B,C raw prefixes}}.
+    Returns out [B,S,d], or (out, new_cache) if return_cache.
+    """
+    z, x_raw, B_raw, C_raw, dt = _project(p, u)
+    prefix = cache["conv"] if cache is not None else {"x": None, "B": None, "C": None}
+    state0 = cache["state"] if cache is not None else None
+    x = jax.nn.silu(_causal_conv(x_raw, p["conv_x"], prefix["x"]).astype(jnp.float32)).astype(u.dtype)
+    Bv = jax.nn.silu(_causal_conv(B_raw, p["conv_B"], prefix["B"]).astype(jnp.float32)).astype(u.dtype)
+    Cv = jax.nn.silu(_causal_conv(C_raw, p["conv_C"], prefix["C"]).astype(jnp.float32)).astype(u.dtype)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    y, fstate = ssd_chunked(x, dt, p["A_log"], Bv, Cv, p["D"], cfg.ssm_chunk, state0)
+    out = _gated_out(p, y, z, cfg.norm_eps)
+    if not return_cache:
+        return out
+    W = cfg.ssm_conv_width
+
+    def tail(prev, raw):  # last W-1 *raw* conv inputs, padded from prev cache
+        if prev is None:
+            prev = jnp.zeros(raw.shape[:1] + (W - 1,) + raw.shape[2:], raw.dtype)
+        return jnp.concatenate([prev.astype(raw.dtype), raw], axis=1)[:, -(W - 1):]
+
+    new_cache = {
+        "state": fstate,
+        "conv": {
+            "x": tail(prefix["x"], x_raw),
+            "B": tail(prefix["B"], B_raw),
+            "C": tail(prefix["C"], C_raw),
+        },
+    }
+    return out, new_cache
+
+
+def mamba2_decode_step(p, u_t, cache, *, cfg: ModelConfig):
+    """One decode step. u_t: [B, 1, d]; cache: {"state", "conv":{x,B,C}}.
+    Returns (out [B,1,d], new_cache)."""
+    state, conv_prefix = cache["state"], cache["conv"]
+    z, x_raw, B_raw, C_raw, dt = _project(p, u_t)
+    x = jax.nn.silu(
+        _causal_conv(x_raw, p["conv_x"], conv_prefix["x"]).astype(jnp.float32)
+    ).astype(u_t.dtype)
+    Bv = jax.nn.silu(
+        _causal_conv(B_raw, p["conv_B"], conv_prefix["B"]).astype(jnp.float32)
+    ).astype(u_t.dtype)
+    Cv = jax.nn.silu(
+        _causal_conv(C_raw, p["conv_C"], conv_prefix["C"]).astype(jnp.float32)
+    ).astype(u_t.dtype)
+    dt = jax.nn.softplus(dt + p["dt_bias"])  # [B,1,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0, :] * A)  # [B,H]
+    xf = x.astype(jnp.float32)[:, 0]  # [B,H,P]
+    dB = Bv.astype(jnp.float32)[:, 0]  # [B,N]
+    dC = Cv.astype(jnp.float32)[:, 0]
+    upd = jnp.einsum("bhp,bn->bhpn", xf * dt[:, 0, :, None], dB)
+    new_state = state * a[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, dC) + xf * p["D"].astype(jnp.float32)[None, :, None]
+    out = _gated_out(p, y[:, None], z, cfg.norm_eps)
+    new_cache = {
+        "state": new_state,
+        "conv": {
+            "x": jnp.concatenate([conv_prefix["x"][:, 1:], x_raw.astype(conv_prefix["x"].dtype)], axis=1),
+            "B": jnp.concatenate([conv_prefix["B"][:, 1:], B_raw.astype(conv_prefix["B"].dtype)], axis=1),
+            "C": jnp.concatenate([conv_prefix["C"][:, 1:], C_raw.astype(conv_prefix["C"].dtype)], axis=1),
+        },
+    }
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    """Per-layer SSM cache pytree (state + conv prefix)."""
+    _, H, P_, N = ssm_dims(cfg)
+    W = cfg.ssm_conv_width
+    return {
+        "state": jnp.zeros((batch, H, P_, N), jnp.float32),
+        "conv": {
+            "x": jnp.zeros((batch, W - 1, H, P_), dtype),
+            "B": jnp.zeros((batch, W - 1, N), dtype),
+            "C": jnp.zeros((batch, W - 1, N), dtype),
+        },
+    }

@@ -1,0 +1,415 @@
+"""Transformer blocks (GQA / MLA / MoE / SSM / cross-attention) and the
+scan-over-layers stack machinery (remat-able, compact HLO).
+
+Every block function has signature ``block(p, x, cache_layer, ctx) ->
+(x', new_cache_layer, aux)`` so heterogeneous stacks compose uniformly.
+``ctx`` carries mode ("train" | "prefill" | "decode"), positions, rope fn, etc.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (
+    attention,
+    decode_attention,
+)
+from repro.models.layers import apply_mrope, apply_rope, mlp, mlp_schema, rmsnorm, rmsnorm_schema
+from repro.models.spec import PSpec
+from repro.runtime import Runtime
+
+
+def _cb(x, rt: Runtime, axes=("batch", None, None)):
+    """Constrain activation sharding (batch over data axes, heads/ff over model)."""
+    if rt.manual:  # inside an explicit shard_map: everything is already local
+        return x
+    from repro.sharding.partition import constrain
+
+    return constrain(x, rt.mesh, axes, batch_axes=rt.batch_axes)
+
+
+def _gw(p, rt: Runtime):
+    """FSDP weight gathering (fsdp2d variant): replicate the layer's weights
+    at block entry — GSPMD lowers this to one all-gather per layer (and the
+    transpose reduce-scatters the grads), the ZeRO-3 pattern."""
+    if not rt.gather_weights or rt.manual:
+        return p
+    import jax.numpy as _jnp
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    rep = NamedSharding(rt.mesh, P())
+    return jax.tree.map(lambda w: jax.lax.with_sharding_constraint(w, rep), p)
+
+
+@dataclass
+class Ctx:
+    cfg: ModelConfig
+    rt: Runtime
+    mode: str  # "train" | "prefill" | "decode"
+    pos: Any = None  # [B,S] (or [B,S,3] mrope); decode: [B] write position
+    rope_pos: Any = None  # decode only: rotary position if != write slot (M-RoPE)
+    enc_out: Any = None  # encoder output for cross-attention
+    enc_len: Any = None  # [B] valid encoder length
+    causal: bool = True
+
+
+def make_rope_fn(cfg: ModelConfig) -> Callable:
+    if cfg.rope_kind == "none":
+        return lambda x, pos: x
+    if cfg.rope_kind == "mrope":
+        return lambda x, pos: apply_mrope(x, pos, cfg.mrope_sections, cfg.rope_theta)
+    return lambda x, pos: apply_rope(x, pos, cfg.rope_theta)
+
+
+# ----------------------------------------------------------------------
+# GQA attention sub-layer
+# ----------------------------------------------------------------------
+def gqa_schema(cfg: ModelConfig) -> dict:
+    H, KV, D, d = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, cfg.d_model
+    return {
+        "wq": PSpec((d, H, D), ("embed", "heads", "head_dim"), init="scaled:0"),
+        "wk": PSpec((d, KV, D), ("embed", "kv_heads", "head_dim"), init="scaled:0"),
+        "wv": PSpec((d, KV, D), ("embed", "kv_heads", "head_dim"), init="scaled:0"),
+        "wo": PSpec((H, D, d), ("heads", "head_dim", "embed"), init="scaled:0"),
+    }
+
+
+def gqa_attn(p, x, cache, ctx: Ctx, *, window: int = 0, ring: bool = False):
+    """Returns (out, new_cache). cache (prefill: None in / built out; decode:
+    {"k","v","len"} per-layer)."""
+    cfg, rt = ctx.cfg, ctx.rt
+    rope_fn = make_rope_fn(cfg)
+    hax = ("batch", None, "heads", None)
+    kax = ("batch", None, "kv_heads", None)
+    q = _cb(jnp.einsum("bsd,dhk->bshk", x, p["wq"]), rt, hax)
+    k = _cb(jnp.einsum("bsd,dhk->bshk", x, p["wk"]), rt, kax)
+    v = _cb(jnp.einsum("bsd,dhk->bshk", x, p["wv"]), rt, kax)
+
+    if ctx.mode in ("train", "prefill"):
+        q = rope_fn(q, ctx.pos)
+        k = rope_fn(k, ctx.pos)
+        o = attention(
+            q, k, v, causal=ctx.causal, window=window, impl=rt.attn_impl,
+            block_q=rt.block_q, block_k=rt.block_k,
+        )
+        out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+        if ctx.mode == "train":
+            return out, None
+        # prefill: build the cache (ring layout for sliding-window layers).
+        # The ring is always window-sized: a prompt shorter than the window
+        # must not evict entries that are still visible during decode.
+        if ring and window:
+            S = k.shape[1]
+            W = window
+            B_, KV_, D_ = k.shape[0], k.shape[2], k.shape[3]
+            kc, vc = k[:, -W:], v[:, -W:]
+            Spos = jnp.arange(max(S - W, 0), S)
+            slots = Spos % W
+            kr = jnp.zeros((B_, W, KV_, D_), k.dtype).at[:, slots].set(kc)
+            vr = jnp.zeros((B_, W, KV_, D_), v.dtype).at[:, slots].set(vc)
+            return out, {"k": kr, "v": vr}
+        return out, {"k": k, "v": v}
+
+    # --- decode: single token, write into cache ---
+    B = x.shape[0]
+    posB = ctx.pos  # [B] absolute position of the new token (cache slot)
+    rope_posB = ctx.rope_pos if ctx.rope_pos is not None else posB
+    rpos = rope_posB[:, None]  # [B,1]
+    if cfg.rope_kind == "mrope":
+        rpos = jnp.broadcast_to(rpos[..., None], (B, 1, 3))
+    q = rope_fn(q, rpos)
+    k = rope_fn(k, rpos)
+    S = cache["k"].shape[1]
+    idx = (posB % S) if ring else jnp.minimum(posB, S - 1)
+    bidx = jnp.arange(B)
+    quant = "k_scale" in cache  # int8 KV cache (per-token-per-head scales)
+    if quant:
+        k_q, k_s = _quant_i8(k[:, 0])
+        v_q, v_s = _quant_i8(v[:, 0])
+        k_cache = cache["k"].at[bidx, idx].set(k_q)
+        v_cache = cache["v"].at[bidx, idx].set(v_q)
+        k_scale = cache["k_scale"].at[bidx, idx].set(k_s)
+        v_scale = cache["v_scale"].at[bidx, idx].set(v_s)
+        k_eff = k_cache.astype(jnp.bfloat16) * k_scale[..., None].astype(jnp.bfloat16)
+        v_eff = v_cache.astype(jnp.bfloat16) * v_scale[..., None].astype(jnp.bfloat16)
+    else:
+        k_cache = cache["k"].at[bidx, idx].set(k[:, 0])
+        v_cache = cache["v"].at[bidx, idx].set(v[:, 0])
+        k_eff, v_eff = k_cache, v_cache
+    cache_len = jnp.minimum(posB + 1, S) if ring else (posB + 1)
+    o = decode_attention(q, k_eff, v_eff, cache_len, window=0 if ring else window,
+                         ring=ring)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    new_cache = {"k": k_cache, "v": v_cache}
+    if quant:
+        new_cache.update(k_scale=k_scale, v_scale=v_scale)
+    return out, new_cache
+
+
+def _quant_i8(x):
+    """[B, KV, D] -> (int8 values, [B, KV] f32 scales)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def cross_attn(p, x, cache, ctx: Ctx):
+    """Cross-attention to encoder output. Prefill builds {"ck","cv"} once."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if ctx.mode == "train":
+        k = jnp.einsum("bsd,dhk->bshk", ctx.enc_out, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", ctx.enc_out, p["wv"])
+        o = attention(q, k, v, causal=False, impl=ctx.rt.attn_impl,
+                      block_q=ctx.rt.block_q, block_k=ctx.rt.block_k)
+        return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), None
+    if ctx.mode == "prefill":
+        k = jnp.einsum("bsd,dhk->bshk", ctx.enc_out, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", ctx.enc_out, p["wv"])
+        o = attention(q, k, v, causal=False, impl=ctx.rt.attn_impl,
+                      block_q=ctx.rt.block_q, block_k=ctx.rt.block_k)
+        return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), {"ck": k, "cv": v}
+    # decode: cached cross k/v
+    o = decode_attention(q, cache["ck"], cache["cv"], ctx.enc_len)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), {"ck": cache["ck"], "cv": cache["cv"]}
+
+
+# ----------------------------------------------------------------------
+# MLA attention sub-layer (DeepSeek-V2)
+# ----------------------------------------------------------------------
+def mla_schema(cfg: ModelConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": PSpec((d, ql), ("embed", "q_lora"), init="scaled:0"),
+        "q_norm": rmsnorm_schema(ql)["scale"],
+        "wq_b": PSpec((ql, H, dn + dr), ("q_lora", "heads", None), init="scaled:0"),
+        "wkv_a": PSpec((d, kl + dr), ("embed", None), init="scaled:0"),
+        "kv_norm": rmsnorm_schema(kl)["scale"],
+        "wk_b": PSpec((kl, H, dn), ("kv_lora", "heads", None), init="scaled:0"),
+        "wv_b": PSpec((kl, H, dv), ("kv_lora", "heads", None), init="scaled:0"),
+        "wo": PSpec((H, dv, d), ("heads", None, "embed"), init="scaled:1"),
+    }
+
+
+def _mla_qkv(p, x, ctx: Ctx):
+    cfg = ctx.cfg
+    kl, dn, dr = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rmsnorm({"scale": p["q_norm"]}, x @ p["wq_a"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qhk->bshk", cq, p["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv_a = x @ p["wkv_a"]  # [B,S,kl+dr]
+    ckv = rmsnorm({"scale": p["kv_norm"]}, kv_a[..., :kl], cfg.norm_eps)
+    k_rope = kv_a[..., None, kl:]  # [B,S,1,dr] shared across heads
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_attn(p, x, cache, ctx: Ctx):
+    cfg, rt = ctx.cfg, ctx.rt
+    kl, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    H = cfg.n_heads
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if ctx.mode in ("train", "prefill"):
+        q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, ctx)
+        q_rope = apply_rope(q_rope, ctx.pos, cfg.rope_theta)
+        k_rope = apply_rope(k_rope, ctx.pos, cfg.rope_theta)
+        k_nope = jnp.einsum("bsk,khn->bshn", ckv, p["wk_b"])
+        v = jnp.einsum("bsk,khv->bshv", ckv, p["wv_b"])
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:2] + (H, dr))], -1)
+        o = attention(q, k, v, causal=True, impl=rt.attn_impl, block_q=rt.block_q,
+                      block_k=rt.block_k)
+        out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+        if ctx.mode == "train":
+            return out, None
+        return out, {"ckv": ckv, "krope": k_rope[:, :, 0, :]}
+
+    # --- decode with the compressed cache + absorbed weights ---
+    B = x.shape[0]
+    posB = ctx.pos
+    q_nope, q_rope, ckv_t, k_rope_t = _mla_qkv(p, x, ctx)
+    q_rope = apply_rope(q_rope, posB[:, None], cfg.rope_theta)
+    k_rope_t = apply_rope(k_rope_t, posB[:, None], cfg.rope_theta)
+    S = cache["ckv"].shape[1]
+    bidx = jnp.arange(B)
+    ckv_c = cache["ckv"].at[bidx, posB].set(ckv_t[:, 0])
+    krope_c = cache["krope"].at[bidx, posB].set(k_rope_t[:, 0, 0])
+    # absorb wk_b into q: scores = (q_nope @ wk_b) . ckv + q_rope . k_rope
+    q_abs = jnp.einsum("bshn,khn->bshk", q_nope, p["wk_b"])  # [B,1,H,kl]
+    q_eff = jnp.concatenate([q_abs, q_rope], -1)  # [B,1,H,kl+dr]
+    k_eff = jnp.concatenate([ckv_c, krope_c], -1)[:, :, None, :]  # [B,S,1,kl+dr]
+    v_eff = ckv_c[:, :, None, :]  # [B,S,1,kl]
+    o = decode_attention(q_eff, k_eff, v_eff, posB + 1, scale=scale)  # [B,1,H,kl]
+    o = jnp.einsum("bshk,khv->bshv", o, p["wv_b"])
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    return out, {"ckv": ckv_c, "krope": krope_c}
+
+
+# ----------------------------------------------------------------------
+# Blocks
+# ----------------------------------------------------------------------
+ZERO_AUX = {"lb_loss": 0.0, "router_z": 0.0, "dropped_frac": 0.0}
+
+
+def dense_block_schema(cfg: ModelConfig, *, attn: str = "gqa", ff: int | None = None) -> dict:
+    d = cfg.d_model
+    sch = {
+        "ln1": rmsnorm_schema(d),
+        "attn": mla_schema(cfg) if attn == "mla" else gqa_schema(cfg),
+        "ln2": rmsnorm_schema(d),
+        "mlp": mlp_schema(d, ff or cfg.d_ff),
+    }
+    return sch
+
+
+def dense_block(p, x, cache, ctx: Ctx, *, window: int = 0, ring: bool = False,
+                attn_kind: str = "gqa"):
+    p = _gw(p, ctx.rt)
+    x = _cb(x, ctx.rt)
+    h = rmsnorm(p["ln1"], x, ctx.cfg.norm_eps)
+    if attn_kind == "mla":
+        a, new_cache = mla_attn(p["attn"], h, cache, ctx)
+    else:
+        a, new_cache = gqa_attn(p["attn"], h, cache, ctx, window=window, ring=ring)
+    x = x + a
+    x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, ctx.cfg.norm_eps))
+    return x, new_cache, None
+
+
+def moe_layer_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": rmsnorm_schema(d),
+        "attn": mla_schema(cfg) if cfg.attn_kind == "mla" else gqa_schema(cfg),
+        "ln2": rmsnorm_schema(d),
+        "moe": moe_mod.moe_schema(cfg),
+    }
+
+
+def moe_layer_block(p, x, cache, ctx: Ctx):
+    # gather attention weights only; expert weights stay sharded (EP)
+    p = {**p, "attn": _gw(p["attn"], ctx.rt), "ln1": _gw(p["ln1"], ctx.rt),
+         "ln2": _gw(p["ln2"], ctx.rt)}
+    x = _cb(x, ctx.rt)
+    h = rmsnorm(p["ln1"], x, ctx.cfg.norm_eps)
+    if ctx.cfg.attn_kind == "mla":
+        a, new_cache = mla_attn(p["attn"], h, cache, ctx)
+    else:
+        a, new_cache = gqa_attn(p["attn"], h, cache, ctx)
+    x = x + a
+    mo, aux = moe_mod.moe_block(p["moe"], rmsnorm(p["ln2"], x, ctx.cfg.norm_eps),
+                                cfg=ctx.cfg, rt=ctx.rt)
+    x = x + mo
+    return x, new_cache, aux
+
+
+def ssm_block_schema(cfg: ModelConfig) -> dict:
+    return {"ln": rmsnorm_schema(cfg.d_model), "mixer": ssm_mod.ssm_schema(cfg)}
+
+
+def ssm_block(p, x, cache, ctx: Ctx):
+    p = _gw(p, ctx.rt)
+    x = _cb(x, ctx.rt)
+    h = rmsnorm(p["ln"], x, ctx.cfg.norm_eps)
+    if ctx.mode == "train":
+        out = ssm_mod.mamba2_block(p["mixer"], h, cfg=ctx.cfg)
+        return x + out, None, None
+    if ctx.mode == "prefill":
+        out, new_cache = ssm_mod.mamba2_block(p["mixer"], h, cfg=ctx.cfg, cache=cache,
+                                              return_cache=True)
+        return x + out, new_cache, None
+    out, new_cache = ssm_mod.mamba2_decode_step(p["mixer"], h, cache, cfg=ctx.cfg)
+    return x + out, new_cache, None
+
+
+def encdec_dec_block_schema(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": rmsnorm_schema(d),
+        "self_attn": gqa_schema(cfg),
+        "ln_x": rmsnorm_schema(d),
+        "cross_attn": gqa_schema(cfg),
+        "ln2": rmsnorm_schema(d),
+        "mlp": mlp_schema(d, cfg.d_ff),
+    }
+
+
+def encdec_dec_block(p, x, cache, ctx: Ctx):
+    p = _gw(p, ctx.rt)
+    x = _cb(x, ctx.rt)
+    self_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+    cross_cache = None if cache is None else {"ck": cache["ck"], "cv": cache["cv"]}
+    h = rmsnorm(p["ln1"], x, ctx.cfg.norm_eps)
+    a, new_self = gqa_attn(p["self_attn"], h, self_cache, ctx)
+    x = x + a
+    h = rmsnorm(p["ln_x"], x, ctx.cfg.norm_eps)
+    c, new_cross = cross_attn(p["cross_attn"], h, cross_cache, ctx)
+    x = x + c
+    x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, ctx.cfg.norm_eps))
+    new_cache = None
+    if new_self is not None:
+        new_cache = {**new_self, **(new_cross or {})}
+    return x, new_cache, None
+
+
+# ----------------------------------------------------------------------
+# Stack machinery
+# ----------------------------------------------------------------------
+def stack_schema(layer_schema: dict, n: int) -> dict:
+    """Add a leading stacked 'layers' axis to every PSpec in a layer schema."""
+
+    def f(s: PSpec) -> PSpec:
+        return PSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype, _stack_init(s.init), s.scale)
+
+    return jax.tree.map(f, layer_schema, is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def _stack_init(init: str) -> str:
+    if init.startswith("scaled:"):
+        return f"scaled:{int(init.split(':')[1]) + 1}"
+    return init
+
+
+def tree_add(a, b):
+    if a is None:
+        return b
+    if b is None:
+        return a
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def scan_stack(block_fn, stacked_p, x, ctx: Ctx, stacked_cache=None):
+    """Scan a homogeneous stack. Returns (x, new_stacked_cache, aux_sum, n_layers)."""
+    has_cache = stacked_cache is not None
+
+    def body(x, xs):
+        p, cache = xs if has_cache else (xs, None)
+        x, new_cache, aux = block_fn(p, x, cache, ctx)
+        aux = aux if aux is not None else (ZERO_AUX if _is_moe(block_fn) else None)
+        return x, (new_cache, aux)
+
+    if ctx.mode == "train" and ctx.rt.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    xs = (stacked_p, stacked_cache) if has_cache else stacked_p
+    x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
+    aux = None
+    if auxs is not None:
+        aux = jax.tree.map(lambda a: jnp.sum(a, axis=0) if a is not None else None, auxs)
+    return x, new_caches, aux
+
+
+def _is_moe(block_fn) -> bool:
+    f = block_fn.func if isinstance(block_fn, partial) else block_fn
+    return f is moe_layer_block

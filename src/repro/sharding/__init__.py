@@ -1,0 +1,17 @@
+from repro.sharding.partition import (
+    RuleSet,
+    cache_rules,
+    logical_to_pspec,
+    serve_rules,
+    sharding_tree,
+    train_rules,
+)
+
+__all__ = [
+    "RuleSet",
+    "cache_rules",
+    "logical_to_pspec",
+    "serve_rules",
+    "sharding_tree",
+    "train_rules",
+]

@@ -1,0 +1,208 @@
+"""Logical-axis -> mesh-axis partition rules with a divisibility fallback.
+
+Model code names tensor dims with logical axes (PSpec.axes); a RuleSet maps
+logical axes to mesh axes per run mode. A dim is sharded only if its size is
+divisible by the mapped mesh-axis product and the mesh axes are not already
+used by another dim of the same tensor — otherwise it is replicated and the
+fallback is recorded (surfaced in the dry-run report; e.g. gemma3's 8 heads
+cannot split a 16-way ``model`` axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.spec import PSpec, is_pspec
+
+
+@dataclass
+class RuleSet:
+    rules: dict[str, Any]  # logical axis -> mesh axis | tuple | None
+    name: str = ""
+    fallbacks: list[str] = field(default_factory=list)  # populated during use
+
+    def get(self, logical: str | None):
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+
+def _axes_tuple(rule) -> tuple[str, ...]:
+    if rule is None:
+        return ()
+    if isinstance(rule, str):
+        return (rule,)
+    return tuple(rule)
+
+
+def logical_to_pspec(spec: PSpec, mesh, ruleset: RuleSet, path: str = "") -> P:
+    entries = []
+    used: set[str] = set()
+    for dim, logical in zip(spec.shape, spec.axes):
+        rule = _axes_tuple(ruleset.get(logical))
+        if not rule:
+            entries.append(None)
+            continue
+        free = tuple(a for a in rule if a not in used)
+        if free != rule:
+            ruleset.fallbacks.append(
+                f"{path or 'tensor'}: dim {logical}={dim}: axes {set(rule) - set(free)} "
+                f"already used (axis-reuse; sharding over {free or 'none'})"
+            )
+        prod = math.prod(mesh.shape[a] for a in free) if free else 1
+        if not free or dim % prod != 0:
+            if free:
+                ruleset.fallbacks.append(
+                    f"{path or 'tensor'}: dim {logical}={dim} !-> {free} "
+                    f"(indivisible; replicated)"
+                )
+            entries.append(None)
+            continue
+        used.update(free)
+        entries.append(free[0] if len(free) == 1 else tuple(free))
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def sharding_tree(schema, mesh, ruleset: RuleSet):
+    """PSpec schema tree -> NamedSharding tree (+ fallbacks recorded)."""
+    paths_specs = jax.tree_util.tree_flatten_with_path(schema, is_leaf=is_pspec)
+    leaves, treedef = paths_specs
+    out = []
+    for path, s in leaves:
+        pstr = jax.tree_util.keystr(path)
+        out.append(NamedSharding(mesh, logical_to_pspec(s, mesh, ruleset, pstr)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ----------------------------------------------------------------------
+# Rule sets
+# ----------------------------------------------------------------------
+def _batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def train_rules(mesh, variant: str = "baseline") -> RuleSet:
+    """baseline: FSDP over the data axes x TP/EP over `model` (Megatron-style
+    activation all-reduces at TP boundaries).
+
+    fsdp2d (perf variant, EXPERIMENTS.md §Perf): no tensor parallelism —
+    batch over (data, model), params fully sharded over every mesh axis and
+    gathered per layer (weight traffic amortizes over the per-device tokens,
+    which beats activation all-reduces whenever tokens/device >> d_model/L).
+    MoE keeps experts on `model` and dispatches via all-to-all.
+    """
+    fsdp = _batch_axes(mesh)
+    if variant == "fsdp2d":
+        all_axes = tuple(mesh.axis_names)
+        batch = tuple(a for a in mesh.axis_names if a in ("data", "model"))
+        return RuleSet(
+            name="train/fsdp2d",
+            rules={
+                "vocab": None,
+                "embed": all_axes,
+                "embed_in": None,
+                "heads": None,
+                "kv_heads": None,
+                "mlp": None,
+                "experts": "model",
+                "expert_mlp": None,
+                "q_lora": None,
+                "kv_lora": None,
+                "ssm_heads": None,
+                "batch": batch,
+            },
+        )
+    return RuleSet(
+        name="train",
+        rules={
+            "vocab": "model",
+            "embed": fsdp,
+            "embed_in": None,
+            "heads": "model",
+            "kv_heads": "model",
+            "mlp": "model",
+            "experts": "model",
+            "expert_mlp": None,
+            "q_lora": None,
+            "kv_lora": None,
+            "ssm_heads": "model",
+            "batch": fsdp,
+        },
+    )
+
+
+def serve_rules(mesh, *, shard_params_data: bool = False) -> RuleSet:
+    """TP over `model`; optionally 2D (also over data) for >HBM archs."""
+    fsdp = _batch_axes(mesh) if shard_params_data else None
+    return RuleSet(
+        name="serve",
+        rules={
+            "vocab": "model",
+            "embed": fsdp,
+            "embed_in": None,
+            "heads": "model",
+            "kv_heads": "model",
+            "mlp": "model",
+            "experts": "model",
+            "expert_mlp": None,
+            "q_lora": None,
+            "kv_lora": None,
+            "ssm_heads": "model",
+        },
+    )
+
+
+def act_rules(mesh, batch_axes: tuple[str, ...] | None = None) -> RuleSet:
+    """Activation layout. Default (TP): batch over data axes, heads/ff over
+    model. fsdp2d: batch spans the model axis, so heads/ff stay unsharded."""
+    batch = tuple(batch_axes) if batch_axes is not None else _batch_axes(mesh)
+    tp = "model" not in batch
+    return RuleSet(
+        name="act",
+        rules={
+            "batch": batch,
+            "heads": "model" if tp else None,
+            "kv_heads": "model" if tp else None,
+            "mlp": "model" if tp else None,
+            "vocab": "model" if tp else None,
+        },
+    )
+
+
+def constrain(x, mesh, logical_axes: tuple, ruleset: RuleSet | None = None,
+              batch_axes: tuple[str, ...] | None = None):
+    """with_sharding_constraint via logical axes (divisibility-fallback aware)."""
+    rs = ruleset or act_rules(mesh, batch_axes)
+    spec = logical_to_pspec(
+        PSpec(tuple(x.shape), tuple(logical_axes)), mesh, rs, "activation"
+    )
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def cache_rules(mesh, *, seq_axes: Any = "model") -> RuleSet:
+    """KV/state-cache rules for decode.
+
+    Default: batch over the data axes, cache *sequence* over `model`
+    (split-KV decode — GQA KV-head counts are usually < 16 so head-sharding
+    cannot use the full axis; sequence sharding can, and is the FlooNoC
+    multi-stream/endpoint-combine analogue). For long_500k (batch=1) pass
+    seq_axes=("data", "model") to use the whole mesh for one sequence.
+    """
+    return RuleSet(
+        name="cache",
+        rules={
+            "batch": _batch_axes(mesh),
+            "seq_shard": seq_axes,
+            "kv_heads": None,
+            "ssm_heads": "model",
+            "heads": None,
+        },
+    )

@@ -1,0 +1,100 @@
+"""Analytical PPA models vs the paper's published numbers (Tables I-III,
+Figs 9-10). These ARE the reproduction targets for the physical results."""
+import pytest
+
+from repro.core.noc import analytical as A
+
+
+def test_table1_link_widths():
+    w = A.link_widths()
+    assert w == {"req": 119, "rsp": 103, "wide": 603}
+
+
+def test_645_gbps_per_link():
+    assert abs(A.peak_link_bandwidth_gbps() - 645) < 1
+
+
+def test_806_gbps_tile_to_tile():
+    assert abs(A.tile_to_tile_bandwidth_gbps() - 806) < 1
+
+
+def test_103_tbps_aggregate():
+    assert abs(A.aggregate_bandwidth_tbps() - 103) < 1
+
+
+def test_fig10_rob_savings():
+    assert A.rob_savings_kge() == 256
+    assert A.ni_area_kge("robless") == 25
+    # 91% NI area reduction
+    red = 1 - A.ni_area_kge("robless") / A.ni_area_kge("rob")
+    assert abs(red - 0.91) < 0.01
+
+
+def test_fig10_multichannel_tradeoff():
+    """RoB-less + multi-channel DMA: the NI saving is partly re-invested in
+    DMA backends + Xbar ports (paper Sec. VI-C) but stays cheaper than the
+    RoB for up to 4 channels."""
+    rob1 = sum(A.tile_ordering_area_kge("rob", 1).values())
+    for c in (1, 2, 3, 4):
+        robless = sum(A.tile_ordering_area_kge("robless", c).values())
+        assert robless < rob1 + (c - 1) * (A.DMA_PER_CHANNEL_KGE + A.XBAR_PER_PORT_KGE)
+    assert sum(A.tile_ordering_area_kge("robless", 1).values()) < rob1 - 200
+
+
+def test_energy_015_pj_per_byte_hop():
+    assert A.energy_per_byte_per_hop_pj() == pytest.approx(0.15)
+    # 4 kB neighbor transfer: 596 pJ (paper Sec. VI-D; 0.1455 pJ/B rounded)
+    assert A.transfer_energy_pj(4096, 1) == pytest.approx(614.4, rel=0.05)
+    assert A.router_energy_4kb_neighbor_pj() == pytest.approx(596, rel=0.01)
+
+
+def test_energy_scales_with_v2():
+    assert A.energy_per_byte_per_hop_pj(0.4) == pytest.approx(0.15 / 4)
+
+
+def test_table2_area_and_density():
+    floo = A.floonoc_system(4, 8)
+    occ = A.occamy_system()
+    assert floo.n_clusters == 32
+    assert floo.die_mm2 == pytest.approx(39.3, rel=0.01)
+    assert occ.die_mm2 == pytest.approx(41.8, rel=0.01)
+    # same floorplan, +33% clusters
+    assert floo.die_mm2 < occ.die_mm2
+    # top-level area: -80%
+    assert 1 - floo.top_mm2 / occ.top_mm2 == pytest.approx(0.80, abs=0.02)
+
+
+def test_table2_gflops():
+    g_occ = A.gflops_dp(24, 1.14)
+    g_floo = A.gflops_dp(32, 1.26)
+    assert g_occ == pytest.approx(438, rel=0.01)
+    assert g_floo == pytest.approx(645, rel=0.01)
+    assert g_floo / g_occ - 1 == pytest.approx(0.47, abs=0.01)  # +47%
+
+
+def test_table2_compute_density():
+    floo = A.floonoc_system(4, 8)
+    dens = A.gflops_dp(32, 1.26) / floo.die_mm2
+    assert dens == pytest.approx(16.4, rel=0.01)
+    occ_dens = A.gflops_dp(24, 1.14) / A.occamy_system().die_mm2
+    assert dens / occ_dens - 1 == pytest.approx(0.58, abs=0.03)  # +58%
+
+
+def test_table3_floonoc_leads_soa():
+    floo = A.SOA_TABLE["floonoc"]
+    for name, row in A.SOA_TABLE.items():
+        if name == "floonoc":
+            continue
+        if row["pj_per_b_hop"] is not None:
+            assert floo["pj_per_b_hop"] <= row["pj_per_b_hop"]
+        if row["t2t_gbps"] is not None:
+            assert floo["t2t_gbps"] >= row["t2t_gbps"]
+    # 3x energy efficiency vs best published silicon (Piton 0.45)
+    assert A.SOA_TABLE["piton"]["pj_per_b_hop"] / floo["pj_per_b_hop"] == pytest.approx(3.0)
+    # >2x link bandwidth vs the best non-Floo SoA (ESP 310 Gbps)
+    assert floo["t2t_gbps"] / A.SOA_TABLE["esp"]["t2t_gbps"] > 2.0
+
+
+def test_noc_area_fraction():
+    assert A.NOC_TILE_FRACTION == pytest.approx(0.035)
+    assert A.INTERCONNECT_TILE_FRACTION == pytest.approx(0.069)

@@ -1,0 +1,60 @@
+"""The dry-run launcher end-to-end (reduced mesh, subprocess with 8 fake
+devices): lower + compile + roofline artifacts for representative cells."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run_dryrun(tmp_path, *args):
+    import os
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["DRYRUN_XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--reduced",
+         "--out", str(tmp_path), *args],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_train_and_decode_cells(tmp_path):
+    stdout = _run_dryrun(
+        tmp_path, "--arch", "deepseek-v2-236b", "--shape", "train_4k", "--mesh", "both")
+    assert "ERROR" not in stdout
+    single = json.loads((tmp_path / "deepseek-v2-236b__train_4k__single.json").read_text())
+    assert single["status"] == "ok"
+    roof = single["roofline"]
+    assert roof["flops_per_device"] > 0
+    assert roof["collective_bytes_per_device"] > 0
+    assert roof["bottleneck"] in ("compute", "memory", "collective")
+    multi = json.loads((tmp_path / "deepseek-v2-236b__train_4k__multi.json").read_text())
+    assert multi["status"] == "ok"
+    assert multi["n_devices"] == 8
+
+
+@pytest.mark.slow
+def test_dryrun_long_context_cell(tmp_path):
+    stdout = _run_dryrun(
+        tmp_path, "--arch", "gemma3-4b", "--shape", "long_500k", "--mesh", "single")
+    assert "ERROR" not in stdout
+    r = json.loads((tmp_path / "gemma3-4b__long_500k__single.json").read_text())
+    assert r["status"] == "ok"
+
+
+@pytest.mark.slow
+def test_dryrun_skip_rule(tmp_path):
+    stdout = _run_dryrun(
+        tmp_path, "--arch", "mistral-large-123b", "--shape", "long_500k",
+        "--mesh", "single")
+    r = json.loads((tmp_path / "mistral-large-123b__long_500k__single.json").read_text())
+    assert r["status"] == "skipped"
+    assert "sub-quadratic" in r["reason"]

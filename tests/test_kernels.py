@@ -1,0 +1,100 @@
+"""Pallas kernel sweeps (interpret mode) vs pure-jnp oracles: shapes x dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.kv_gather import kv_gather
+from repro.kernels.kv_gather.ref import kv_gather_ref
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.rmsnorm.ops import rmsnorm_residual
+from repro.kernels.rmsnorm.ref import rmsnorm_ref, rmsnorm_residual_ref
+from repro.kernels.ssd import ssd
+from repro.kernels.ssd.ref import ssd_ref
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=1e-5), jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,D,bq,bk", [
+    (1, 128, 2, 2, 64, 64, 64),
+    (2, 256, 4, 2, 64, 128, 64),
+    (1, 128, 8, 1, 32, 32, 32),  # MQA
+])
+def test_flash_attention_sweep(B, S, H, KV, D, bq, bk, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    G = H // KV
+    ke = jnp.broadcast_to(k[:, :, :, None], (B, S, KV, G, D)).reshape(B, S, H, D)
+    ve = jnp.broadcast_to(v[:, :, :, None], (B, S, KV, G, D)).reshape(B, S, H, D)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+        ke.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+        ve.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+    ).reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N,d", [(64, 128), (256, 384), (32, 1024)])
+def test_rmsnorm_sweep(N, d, dtype):
+    x = jax.random.normal(jax.random.key(0), (N, d), dtype)
+    w = (jax.random.normal(jax.random.key(1), (d,)) * 0.1 + 1).astype(jnp.float32)
+    out = rmsnorm(x, w, interpret=True)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), rmsnorm_ref(x, w).astype(jnp.float32), **TOL[dtype])
+
+
+def test_rmsnorm_residual_fused():
+    x = jax.random.normal(jax.random.key(0), (64, 256), jnp.float32)
+    r = jax.random.normal(jax.random.key(1), (64, 256), jnp.float32)
+    w = jnp.ones((256,))
+    out, res = rmsnorm_residual(x, r, w, interpret=True)
+    ref_out, ref_res = rmsnorm_residual_ref(x, r, w)
+    np.testing.assert_allclose(out, ref_out, atol=2e-5)
+    np.testing.assert_allclose(res, ref_res, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 3, 16, 8, 32),
+    (1, 128, 1, 32, 16, 64),
+])
+def test_ssd_sweep(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.key(0), 4)
+    x = (jax.random.normal(ks[0], (B, S, H, P)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(dtype)
+    Bv = (jax.random.normal(ks[2], (B, S, N)) * 0.5).astype(dtype)
+    Cv = (jax.random.normal(ks[3], (B, S, N)) * 0.5).astype(dtype)
+    A_log = jax.random.normal(jax.random.key(9), (H,)) * 0.2
+    D = jnp.ones((H,))
+    y = ssd(x, dt, Bv, Cv, A_log, D, chunk=chunk, interpret=True)
+    Bb = jnp.broadcast_to(Bv[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    Cb = jnp.broadcast_to(Cv[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    yref = ssd_ref(
+        x.transpose(0, 2, 1, 3).reshape(B * H, S, P),
+        dt.transpose(0, 2, 1).reshape(B * H, S),
+        Bb, Cb, jnp.tile(A_log, B), jnp.tile(D, B),
+    ).reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    tol = dict(atol=1e-3, rtol=1e-3) if dtype == jnp.float32 else dict(atol=0.15, rtol=0.1)
+    np.testing.assert_allclose(
+        y.astype(jnp.float32), yref.astype(jnp.float32), **tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("n_pages,page,KVD,B,mp", [(10, 8, 32, 3, 4), (64, 16, 128, 2, 8)])
+def test_kv_gather_sweep(n_pages, page, KVD, B, mp, dtype):
+    if dtype == jnp.int32:
+        pages = jax.random.randint(jax.random.key(0), (n_pages, page, KVD), 0, 100, dtype)
+    else:
+        pages = jax.random.normal(jax.random.key(0), (n_pages, page, KVD), dtype)
+    table = jax.random.randint(jax.random.key(1), (B, mp), 0, n_pages)
+    out = kv_gather(pages, table, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(kv_gather_ref(pages, table)))

@@ -1,0 +1,53 @@
+"""Paper Fig. 7: tile-to-tile narrow read latency — 22 cycles neighbor,
++4 cycles per extra hop, 58 cycles corner-to-corner on the 8x4 mesh."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.noc import endpoints as epm
+from repro.core.noc import sim as S
+from repro.core.noc.params import NocParams
+from repro.core.noc.topology import build_mesh
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return build_mesh(nx=4, ny=8)
+
+
+def _narrow_lat(topo, src: int, dst: int, cycles: int = 900) -> float:
+    E = topo.n_endpoints
+    wl = epm.idle_workload(E, n_tiles=topo.meta["n_tiles"])
+    nr = np.zeros((E,), np.float32)
+    nr[src] = 0.02
+    nd = np.full((E,), -1, np.int32)
+    nd[src] = dst
+    wl = dataclasses.replace(wl, narrow_rate=nr, narrow_dst=nd)
+    sim = S.build_sim(topo, NocParams(), wl)
+    out = S.stats(sim, S.run(sim, cycles))
+    assert out["narrow_lat_cnt"][src] > 5
+    return float(out["narrow_lat_mean"][src])
+
+
+def test_neighbor_22_cycles(topo):
+    assert _narrow_lat(topo, 0, 1) == 22.0
+
+
+def test_corner_to_corner_58_cycles(topo):
+    assert _narrow_lat(topo, 0, 31) == 58.0
+
+
+def test_four_cycles_per_hop(topo):
+    """Each additional router hop costs 4 round-trip cycles (2 per direction)."""
+    lat1 = _narrow_lat(topo, 0, 1)  # 2 routers
+    lat2 = _narrow_lat(topo, 0, 2)  # 3 routers
+    lat3 = _narrow_lat(topo, 0, 3)  # 4 routers
+    assert lat2 - lat1 == 4.0
+    assert lat3 - lat2 == 4.0
+
+
+def test_hops_match_xy_routing(topo):
+    # XY routing: routers traversed = |dx| + |dy| + 1
+    for dst, want in [(1, 2), (3, 4), (4, 2), (7, 5), (31, 11)]:
+        assert topo.hops(0, dst) == want

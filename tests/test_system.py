@@ -1,0 +1,63 @@
+"""End-to-end behaviour tests: train a tiny model, checkpoint, resume, serve."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.serve import Engine, ServeConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _dcfg(cfg, seq=64, batch=4):
+    return DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
+        modality=cfg.modality if cfg.family == "encdec" or cfg.modality == "vision" else "text",
+        d_model=cfg.d_model, frontend_tokens=cfg.frontend_tokens,
+    )
+
+
+def test_train_loss_decreases():
+    cfg = get_config("granite-8b").reduced()
+    tcfg = TrainerConfig(steps=60, log_every=0,
+                         opt=AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60))
+    tr = Trainer(cfg, _dcfg(cfg), tcfg)
+    _, _, hist = tr.run(resume=False)
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.2
+
+
+def test_checkpoint_resume_exact(tmp_path):
+    cfg = get_config("granite-8b").reduced()
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    # run 1: 10 steps with checkpoints
+    t1 = Trainer(cfg, _dcfg(cfg), TrainerConfig(
+        steps=10, log_every=0, ckpt_every=5, ckpt_dir=str(tmp_path / "ck"), opt=opt))
+    _, _, h1 = t1.run(resume=False)
+    # run 2: full 10 steps fresh for reference continuation
+    t2 = Trainer(cfg, _dcfg(cfg), TrainerConfig(
+        steps=14, log_every=0, ckpt_dir=str(tmp_path / "ck"), opt=opt))
+    _, _, h2 = t2.run(resume=True)  # resumes from step 10
+    assert h2[0]["step"] == 10, "should resume from the checkpoint"
+    assert all(np.isfinite(h["loss"]) for h in h2)
+
+
+def test_serve_batched_requests():
+    cfg = get_config("granite-8b").reduced()
+    tr = Trainer(cfg, _dcfg(cfg), TrainerConfig(steps=2, log_every=0))
+    params, _, _ = tr.run(resume=False)
+    eng = Engine(cfg, params, scfg=ServeConfig(max_new_tokens=6))
+    outs = eng.generate([[1, 2, 3, 4, 5], [7, 8], [9, 10, 11]])
+    assert len(outs) == 3
+    assert all(len(o) == 6 for o in outs)
+    assert all(0 <= t < cfg.vocab_size for o in outs for t in o)
+
+
+def test_serve_deterministic_greedy():
+    cfg = get_config("mamba2-130m").reduced()
+    tr = Trainer(cfg, _dcfg(cfg), TrainerConfig(steps=2, log_every=0))
+    params, _, _ = tr.run(resume=False)
+    eng = Engine(cfg, params, scfg=ServeConfig(max_new_tokens=5))
+    a = eng.generate([[1, 2, 3, 4]])
+    b = eng.generate([[1, 2, 3, 4]])
+    assert a == b
