@@ -24,12 +24,14 @@ def main() -> None:
         fig9_area_power,
         fig10_rob,
         fig11_hbm,
+        sim_throughput,
         table1_links,
         table2_occamy,
         table3_soa,
     )
 
     modules = [
+        ("sim_throughput", sim_throughput),
         ("table1_links", table1_links),
         ("fig7_latency", fig7_latency),
         ("fig8_traffic", fig8_traffic),

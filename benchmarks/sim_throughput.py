@@ -1,0 +1,56 @@
+"""Simulator engine microbenchmark: scan-body compile time and simulated
+cycles/second of the channel-batched fabric on the paper's 8x4 mesh.
+
+Pre-refactor baseline (per-channel FabricState list, dict-of-arrays flits,
+same host): compile+first-run 5.5 s, steady state ~1400 cycles/s.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import row
+from repro.core.noc import sim as S
+from repro.core.noc import traffic as T
+from repro.core.noc.params import NocParams
+from repro.core.noc.topology import build_mesh
+
+BASELINE_CYC_PER_S = 1400  # seed engine, steady state, 8x4 mesh / 2000 cycles
+
+
+def _measure(params: NocParams, streams: int, n_cycles: int, iters: int):
+    topo = build_mesh(nx=4, ny=8)
+    wl = T.dma_workload(topo, "uniform", transfer_kb=8, n_txns=4, streams=streams)
+    sim = S.build_sim(topo, params, wl)
+    st0 = sim.init_state()
+    t0 = time.perf_counter()
+    r = S.run(sim, n_cycles, state=st0)
+    jax.block_until_ready(r.cycle)
+    compile_s = time.perf_counter() - t0
+    steady = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = S.run(sim, n_cycles, state=st0)
+        jax.block_until_ready(r.cycle)
+        steady = min(steady, time.perf_counter() - t0)
+    return compile_s, n_cycles / steady
+
+
+def bench(full: bool = False) -> list[dict]:
+    n_cycles = 4000 if full else 2000
+    iters = 3 if full else 2
+    rows = []
+    compile_s, cps = _measure(NocParams(), streams=1, n_cycles=n_cycles, iters=iters)
+    rows.append(row("sim_throughput/8x4/compile_s", compile_s * 1e6,
+                    round(compile_s, 2)))
+    rows.append(row("sim_throughput/8x4/cycles_per_s", 0.0, round(cps),
+                    target=BASELINE_CYC_PER_S, cmp="ge"))
+    # channel scaling: trace size is channel-count independent, so extra wide
+    # channels must not blow up compile time (runtime grows with state size)
+    c4, cps4 = _measure(NocParams(n_channels=4), streams=2,
+                        n_cycles=n_cycles, iters=iters)
+    rows.append(row("sim_throughput/8x4_c4/compile_s", c4 * 1e6, round(c4, 2),
+                    target=round(3 * max(compile_s, 0.1), 2), cmp="le"))
+    rows.append(row("sim_throughput/8x4_c4/cycles_per_s", 0.0, round(cps4)))
+    return rows

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime import axis_size
+
 
 # ----------------------------------------------------------------------
 # Bucketing: pack a pytree into n_streams flat f32 buckets (wide flits)
@@ -104,7 +106,7 @@ def dim_ordered_pmean(x, axes: tuple[str, ...]):
     x = dim_ordered_psum(x, axes)
     n = 1
     for a in axes:
-        n *= jax.lax.axis_size(a)
+        n *= axis_size(a)
     return x / n
 
 
@@ -154,9 +156,9 @@ def multi_stream_sync(grads, cfg: SyncConfig, plan: BucketPlan | None = None,
     buckets = to_buckets(grads, plan)
     n_members = 1
     for a in cfg.intra_axes:
-        n_members *= jax.lax.axis_size(a)
+        n_members *= axis_size(a)
     if cfg.pod_axis is not None:
-        n_members *= jax.lax.axis_size(cfg.pod_axis)
+        n_members *= axis_size(cfg.pod_axis)
 
     new_ef = []
     out = []

@@ -12,7 +12,10 @@ The multi-stream DMA (paper Sec. IV-A) gives each backend its own TxnID, so
 RoB-less ordering never stalls across streams — the paper's key end-to-end
 insight.
 
-Everything is vectorized over endpoints (jnp arrays, no per-endpoint python).
+Everything is vectorized over endpoints *and* physical channels (jnp arrays,
+no per-endpoint or per-channel python). Flits are packed int32 arrays with a
+trailing field axis (engine.FLIT_FIELDS); the egress queues carry a leading
+channel axis aligned with the channel-batched fabric.
 """
 from __future__ import annotations
 
@@ -22,19 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.noc.engine import FLIT_FIELDS, empty_flits
-from repro.core.noc.params import (
-    CH_REQ,
-    CH_RSP,
-    CH_WIDE,
-    NARROW_REQ,
-    NARROW_RSP,
-    WIDE_AR,
-    WIDE_AW_W,
-    WIDE_B,
-    WIDE_R,
-    NocParams,
-)
+from repro.core.noc.engine import NF, empty_flits
+from repro.core.noc.params import NocParams
 
 
 @dataclass(frozen=True)
@@ -95,17 +87,17 @@ class EndpointState:
     t_aww_src: jnp.ndarray  # [E]
     t_aww_txn: jnp.ndarray  # [E]
     # memory request queue + server
-    mq: dict  # fields [E, Q]
+    mq: jnp.ndarray  # [E, Q, NMQ] packed requests
     mq_cnt: jnp.ndarray  # [E]
     m_busy: jnp.ndarray  # [E] service countdown
     m_beats: jnp.ndarray  # [E] beats left of current response
-    m_flit: dict  # current response template fields [E]
+    m_flit: jnp.ndarray  # current response template [E, NF]
     m_active: jnp.ndarray  # [E] bool
     hbm_tok: jnp.ndarray  # [E] f32
-    # egress queues (per channel): fields + ready time
-    eg: dict  # fields [3, E, Q]
-    eg_ready: jnp.ndarray  # [3, E, Q]
-    eg_cnt: jnp.ndarray  # [3, E]
+    # egress queues (channel axis aligned with the fabric): flits + ready time
+    eg: jnp.ndarray  # [C, E, Q, NF]
+    eg_ready: jnp.ndarray  # [C, E, Q]
+    eg_cnt: jnp.ndarray  # [C, E]
     # stats
     lat_sum: jnp.ndarray  # [E] f32 narrow round-trip latency
     lat_cnt: jnp.ndarray  # [E]
@@ -119,12 +111,16 @@ class EndpointState:
     first_rx: jnp.ndarray  # [E] cycle of the first payload beat (-1)
 
 
+# packed memory-queue layout (trailing axis, like flits)
 MQ_FIELDS = ("src", "txn", "beats", "kind", "ts")
+NMQ = len(MQ_FIELDS)
+MQ_SRC, MQ_TXN, MQ_BEATS, MQ_KIND, MQ_TS = range(NMQ)
 
 
 def init_endpoints(E: int, params: NocParams, streams: int) -> EndpointState:
     T, Q = params.n_txn_ids, params.memq_depth
     EQ = params.egress_depth
+    C = params.n_channels
     z = lambda *s: jnp.zeros(s, jnp.int32)
     return EndpointState(
         ni_cnt=z(E, T), ni_dst=jnp.full((E, T), -1, jnp.int32),
@@ -135,12 +131,12 @@ def init_endpoints(E: int, params: NocParams, streams: int) -> EndpointState:
         w_stream=jnp.full((E,), -1, jnp.int32), w_left=z(E), w_dst=z(E),
         w_txn=z(E), w_ts=z(E),
         t_aww_left=z(E), t_aww_src=z(E), t_aww_txn=z(E),
-        mq={f: z(E, Q) for f in MQ_FIELDS}, mq_cnt=z(E),
+        mq=z(E, Q, NMQ), mq_cnt=z(E),
         m_busy=z(E), m_beats=z(E), m_flit=empty_flits((E,)),
         m_active=jnp.zeros((E,), bool),
         hbm_tok=jnp.zeros((E,), jnp.float32),
-        eg={f: z(3, E, EQ) for f in FLIT_FIELDS}, eg_ready=z(3, E, EQ),
-        eg_cnt=z(3, E),
+        eg=z(C, E, EQ, NF), eg_ready=z(C, E, EQ),
+        eg_cnt=z(C, E),
         lat_sum=jnp.zeros((E,), jnp.float32), lat_cnt=z(E),
         beats_rcvd=z(E), beats_sent=z(E), ni_stall=z(E), hbm_served=z(E),
         n_sent=z(E), d_done=z(E, streams),
@@ -159,51 +155,80 @@ def _hash(a, b, c):
     return (h & u(0x7FFFFFFF)).astype(jnp.int32)
 
 
-def _mq_push(st: EndpointState, mask, src, txn, beats, kind, ts):
-    Q = st.mq["src"].shape[1]
-    idx = jnp.clip(st.mq_cnt, 0, Q - 1)
+def _pack_mq(src, txn, beats, kind, ts) -> jnp.ndarray:
+    ref = jnp.asarray(src, jnp.int32)
+    parts = [
+        jnp.broadcast_to(jnp.asarray(v, jnp.int32), ref.shape)
+        for v in (ref, txn, beats, kind, ts)
+    ]
+    return jnp.stack(parts, axis=-1)
+
+
+def _mq_push(mq, mq_cnt, mask, src, txn, beats, kind, ts):
+    """Push one request per endpoint where mask [E]. mq: [E, Q, NMQ]."""
+    Q = mq.shape[1]
+    idx = jnp.clip(mq_cnt, 0, Q - 1)
     onehot = jax.nn.one_hot(idx, Q, dtype=jnp.bool_) & mask[:, None]
-    kind_arr = jnp.broadcast_to(jnp.asarray(kind, jnp.int32), mask.shape)
-    beats_arr = jnp.broadcast_to(jnp.asarray(beats, jnp.int32), mask.shape)
-    vals = {"src": src, "txn": txn, "beats": beats_arr, "kind": kind_arr, "ts": ts}
-    mq = {f: jnp.where(onehot, vals[f][:, None], st.mq[f]) for f in MQ_FIELDS}
-    return mq, st.mq_cnt + mask.astype(jnp.int32)
+    vals = _pack_mq(src, txn, beats, kind, ts)  # [E, NMQ]
+    mq = jnp.where(onehot[..., None], vals[:, None, :], mq)
+    return mq, mq_cnt + mask.astype(jnp.int32)
 
 
-def _eg_push(eg, eg_ready, eg_cnt, ch: int, mask, flit: dict, ready):
-    Q = eg_ready.shape[-1]
-    idx = jnp.clip(eg_cnt[ch], 0, Q - 1)
-    onehot = jax.nn.one_hot(idx, Q, dtype=jnp.bool_) & mask[:, None]
-    eg = {
-        f: eg[f].at[ch].set(jnp.where(onehot, flit[f][:, None], eg[f][ch]))
-        for f in FLIT_FIELDS
-    }
-    eg_ready = eg_ready.at[ch].set(jnp.where(onehot, ready[:, None], eg_ready[ch]))
-    return eg, eg_ready, eg_cnt.at[ch].add(mask.astype(jnp.int32))
+def _mq_push_multi(mq, mq_cnt, mask, src, txn, beats, kind, ts):
+    """Push up to one request per (channel, endpoint) where mask [C, E]; same-
+    endpoint pushes from different channels land in consecutive slots (channel
+    order). All value args are [C, E] (or broadcastable scalars)."""
+    Q = mq.shape[1]
+    m = mask.astype(jnp.int32)
+    offset = jnp.cumsum(m, axis=0) - m  # pushes from lower channels this cycle
+    idx = jnp.clip(mq_cnt[None, :] + offset, 0, Q - 1)
+    onehot = jax.nn.one_hot(idx, Q, dtype=jnp.bool_) & mask[..., None]  # [C, E, Q]
+    vals = _pack_mq(jnp.broadcast_to(jnp.asarray(src, jnp.int32), mask.shape),
+                    txn, beats, kind, ts)  # [C, E, NMQ]
+    # prefix offsets give each channel its own slot; on overflow the clip can
+    # alias several channels onto slot Q-1, so keep only the highest channel
+    # per slot (last-write-wins, like sequential per-channel pushes)
+    prio = jnp.arange(mask.shape[0], dtype=jnp.int32)[:, None, None]  # [C, 1, 1]
+    winner = jnp.where(onehot, prio, -1).max(axis=0)  # [E, Q]
+    sel = onehot & (winner[None] == prio)
+    contrib = jnp.sum(jnp.where(sel[..., None], vals[:, :, None, :], 0), axis=0)
+    written = onehot.any(axis=0)  # [E, Q]
+    mq = jnp.where(written[..., None], contrib, mq)
+    return mq, mq_cnt + m.sum(axis=0)
 
 
-def _eg_pop(eg, eg_ready, eg_cnt, ch: int, mask):
-    eg = {
-        f: eg[f].at[ch].set(
-            jnp.where(mask[:, None], jnp.roll(eg[f][ch], -1, axis=-1), eg[f][ch])
-        )
-        for f in FLIT_FIELDS
-    }
-    eg_ready = eg_ready.at[ch].set(
-        jnp.where(mask[:, None], jnp.roll(eg_ready[ch], -1, axis=-1), eg_ready[ch])
-    )
-    return eg, eg_ready, eg_cnt.at[ch].add(-mask.astype(jnp.int32))
+def _eg_push(eg, eg_ready, eg_cnt, ch, mask, flit, ready):
+    """Push flit [E, NF] onto the egress queue of channel ch, which may be a
+    static int or a per-endpoint [E] int array (dynamic channel select)."""
+    C, E, Q = eg_ready.shape
+    ch = jnp.broadcast_to(jnp.asarray(ch, jnp.int32), (E,))
+    ch_oh = jax.nn.one_hot(ch, C, axis=0, dtype=jnp.bool_)  # [C, E]
+    cnt_at = jnp.take_along_axis(eg_cnt, ch[None, :], axis=0)[0]  # [E]
+    slot_oh = jax.nn.one_hot(jnp.clip(cnt_at, 0, Q - 1), Q, dtype=jnp.bool_)  # [E, Q]
+    m3 = ch_oh[:, :, None] & slot_oh[None] & mask[None, :, None]  # [C, E, Q]
+    eg = jnp.where(m3[..., None], flit[None, :, None, :], eg)
+    eg_ready = jnp.where(m3, ready[None, :, None], eg_ready)
+    return eg, eg_ready, eg_cnt + (ch_oh & mask[None]).astype(jnp.int32)
+
+
+def _eg_pop(eg, eg_ready, eg_cnt, mask):
+    """Pop the head of every (channel, endpoint) queue where mask [C, E]."""
+    eg = jnp.where(mask[..., None, None], jnp.roll(eg, -1, axis=2), eg)
+    eg_ready = jnp.where(mask[..., None], jnp.roll(eg_ready, -1, axis=2), eg_ready)
+    return eg, eg_ready, eg_cnt - mask.astype(jnp.int32)
 
 
 def _ni_check(st: EndpointState, txn, dst, params: NocParams, beats):
-    """RoB-less / RoB admission check. txn, dst, beats: [E]."""
-    E = txn.shape[0]
-    eidx = jnp.arange(E)
+    """RoB-less / RoB admission check. txn, dst, beats: [E] or [E, S] (any
+    trailing stream axes; endpoint axis first)."""
+    E = st.ni_cnt.shape[0]
+    eidx = jnp.arange(E).reshape((E,) + (1,) * (jnp.ndim(txn) - 1))
     cnt = st.ni_cnt[eidx, txn]
     last = st.ni_dst[eidx, txn]
     if params.ni_order == "robless":
         return (cnt == 0) | (last == dst)
-    return st.rob_credit >= beats  # rob: end-to-end credit flow control
+    rob = st.rob_credit.reshape((E,) + (1,) * (jnp.ndim(txn) - 1))
+    return rob >= beats  # rob: end-to-end credit flow control
 
 
 def _ni_issue(st: EndpointState, mask, txn, dst, beats, params: NocParams):
@@ -216,8 +241,14 @@ def _ni_issue(st: EndpointState, mask, txn, dst, beats, params: NocParams):
 
 
 def _ni_retire(ni_cnt, ni_dst, rob_credit, mask, txn, beats, params: NocParams):
-    E = txn.shape[0]
-    eidx = jnp.arange(E)
+    """Retire completions. mask/txn: [..., E]-shaped with the endpoint axis
+    last (leading axes, e.g. channel, are scatter-summed)."""
+    E = ni_cnt.shape[0]
+    eidx = jnp.broadcast_to(jnp.arange(E), jnp.shape(txn))
     ni_cnt = ni_cnt.at[eidx, txn].add(-mask.astype(jnp.int32))
-    rob = rob_credit + jnp.where(mask & (params.ni_order == "rob"), beats, 0)
-    return ni_cnt, ni_dst, rob
+    if params.ni_order == "rob":
+        credit = jnp.where(mask, jnp.broadcast_to(jnp.asarray(beats, jnp.int32),
+                                                  jnp.shape(txn)), 0)
+        lead = tuple(range(jnp.ndim(txn) - 1))
+        rob_credit = rob_credit + credit.sum(axis=lead)
+    return ni_cnt, ni_dst, rob_credit

@@ -1,8 +1,17 @@
-"""Vectorized cycle-accurate router fabric in JAX.
+"""Vectorized cycle-accurate router fabric in JAX, batched over physical
+channels.
 
-One fabric = one physical channel (the paper instantiates three separate
-routers per tile: req / rsp / wide). State is a struct-of-arrays over
-[R routers, P ports, DEPTH fifo slots].
+One FabricState carries *all* physical channels of the NoC (the paper
+instantiates three separate routers per tile: req / rsp / wide; PATRONoC-style
+configurations add more). State is a packed array over
+[C channels, R routers, P ports, DEPTH fifo slots, NF flit fields]: the
+per-channel router logic is written once for a single channel and vmapped over
+the leading channel axis, so the lax.scan step body contains no Python channel
+loop and the traced op count is independent of the channel count.
+
+Flits are a single int32 array with a trailing field axis (see FLIT_FIELDS /
+F_* indices) instead of a dict of seven arrays: every push/pop/gather is one
+jnp.where instead of seven.
 
 Cycle semantics: arbitration and link decisions are both computed from the
 cycle-start snapshot, then applied. A flit therefore spends >= 1 cycle in the
@@ -19,60 +28,68 @@ import numpy as np
 
 from repro.core.noc.topology import Topology
 
+# packed flit layout: trailing axis of NF int32 fields
 FLIT_FIELDS = ("dst", "src", "kind", "txn", "last", "ts", "meta")
+NF = len(FLIT_FIELDS)
+F_DST, F_SRC, F_KIND, F_TXN, F_LAST, F_TS, F_META = range(NF)
 
 
-def empty_flits(shape) -> dict:
-    return {f: jnp.zeros(shape, jnp.int32) for f in FLIT_FIELDS}
+def empty_flits(shape) -> jnp.ndarray:
+    """Zeroed packed flit array of shape [*shape, NF]."""
+    return jnp.zeros((*tuple(shape), NF), jnp.int32)
 
 
-def flit_where(c, a, b) -> dict:
-    return {f: jnp.where(c, a[f], b[f]) for f in FLIT_FIELDS}
-
-
-def flit_gather(flits: dict, *idx) -> dict:
-    return {f: flits[f][idx] for f in FLIT_FIELDS}
+def pack_flit(dst, src, kind, txn, last, ts, meta) -> jnp.ndarray:
+    """Pack per-field values (broadcast against dst's shape) into [..., NF]."""
+    ref = jnp.asarray(dst, jnp.int32)
+    parts = [
+        jnp.broadcast_to(jnp.asarray(v, jnp.int32), ref.shape)
+        for v in (ref, src, kind, txn, last, ts, meta)
+    ]
+    return jnp.stack(parts, axis=-1)
 
 
 @jax.tree_util.register_dataclass
 @dataclass
 class FabricState:
-    in_buf: dict  # [R, P, Din] flit fields
-    in_cnt: jnp.ndarray  # [R, P]
-    out_buf: dict  # [R, P, Dout]
-    out_cnt: jnp.ndarray  # [R, P]
-    rr_ptr: jnp.ndarray  # [R, P] round-robin pointer per *output* port
-    wh_lock: jnp.ndarray  # [R, P] wormhole: locked input port (-1 = free)
+    in_buf: jnp.ndarray  # [C, R, P, Din, NF]
+    in_cnt: jnp.ndarray  # [C, R, P]
+    out_buf: jnp.ndarray  # [C, R, P, Dout, NF]
+    out_cnt: jnp.ndarray  # [C, R, P]
+    rr_ptr: jnp.ndarray  # [C, R, P] round-robin pointer per *output* port
+    wh_lock: jnp.ndarray  # [C, R, P] wormhole: locked input port (-1 = free)
 
 
-def init_fabric(topo: Topology, depth_in: int, depth_out: int) -> FabricState:
-    R, P = topo.n_routers, topo.n_ports
+def init_fabric(
+    topo: Topology, depth_in: int, depth_out: int, n_channels: int
+) -> FabricState:
+    C, R, P = n_channels, topo.n_routers, topo.n_ports
     return FabricState(
-        in_buf=empty_flits((R, P, depth_in)),
-        in_cnt=jnp.zeros((R, P), jnp.int32),
-        out_buf=empty_flits((R, P, depth_out)),
-        out_cnt=jnp.zeros((R, P), jnp.int32),
-        rr_ptr=jnp.zeros((R, P), jnp.int32),
-        wh_lock=jnp.full((R, P), -1, jnp.int32),
+        in_buf=empty_flits((C, R, P, depth_in)),
+        in_cnt=jnp.zeros((C, R, P), jnp.int32),
+        out_buf=empty_flits((C, R, P, depth_out)),
+        out_cnt=jnp.zeros((C, R, P), jnp.int32),
+        rr_ptr=jnp.zeros((C, R, P), jnp.int32),
+        wh_lock=jnp.full((C, R, P), -1, jnp.int32),
     )
 
 
-def fifo_pop(buf: dict, cnt, pop_mask):
-    shifted = {f: jnp.roll(v, -1, axis=-1) for f, v in buf.items()}
-    newbuf = flit_where(pop_mask[..., None], shifted, buf)
+def fifo_pop(buf: jnp.ndarray, cnt, pop_mask):
+    shifted = jnp.roll(buf, -1, axis=-2)
+    newbuf = jnp.where(pop_mask[..., None, None], shifted, buf)
     return newbuf, cnt - pop_mask.astype(jnp.int32)
 
 
-def fifo_push(buf: dict, cnt, push_mask, flit: dict):
-    D = next(iter(buf.values())).shape[-1]
+def fifo_push(buf: jnp.ndarray, cnt, push_mask, flit: jnp.ndarray):
+    D = buf.shape[-2]
     idx = jnp.clip(cnt, 0, D - 1)
     onehot = jax.nn.one_hot(idx, D, dtype=jnp.bool_) & push_mask[..., None]
-    newbuf = {f: jnp.where(onehot, flit[f][..., None], buf[f]) for f in FLIT_FIELDS}
+    newbuf = jnp.where(onehot[..., None], flit[..., None, :], buf)
     return newbuf, cnt + push_mask.astype(jnp.int32)
 
 
-def heads(buf: dict) -> dict:
-    return {f: v[..., 0] for f, v in buf.items()}
+def heads(buf: jnp.ndarray) -> jnp.ndarray:
+    return buf[..., 0, :]
 
 
 @dataclass(frozen=True)
@@ -101,19 +118,17 @@ def make_tables(topo: Topology) -> FabricTables:
     )
 
 
-def fabric_cycle(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarray):
-    """One cycle: decide arb + link from the snapshot, then apply.
-
-    ep_ingress_space: [E] bool — endpoint can accept one flit this cycle.
-    Returns (state', ep_flit fields [E], ep_valid [E])."""
+def _cycle_one(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarray):
+    """One cycle of a single channel: decide arb + link from the snapshot,
+    then apply. State leaves here are unbatched ([R, P, ...])."""
     R, P = st.in_cnt.shape
-    Din = next(iter(st.in_buf.values())).shape[-1]
-    Dout = next(iter(st.out_buf.values())).shape[-1]
+    Din = st.in_buf.shape[-2]
+    Dout = st.out_buf.shape[-2]
 
     # ---------------- arbitration decisions (from snapshot) ----------------
-    h = heads(st.in_buf)
+    h = heads(st.in_buf)  # [R, P, NF]
     h_valid = st.in_cnt > 0
-    req_port = jnp.take_along_axis(tb.route, jnp.clip(h["dst"], 0, None), axis=1)
+    req_port = jnp.take_along_axis(tb.route, jnp.clip(h[..., F_DST], 0, None), axis=1)
     req_port = jnp.where(h_valid, req_port, -1)  # [R, P_in]
 
     pout = jnp.arange(P)
@@ -129,10 +144,10 @@ def fabric_cycle(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarra
     granted = jnp.take_along_axis(score, winner[:, None, :], axis=1)[:, 0, :] <= P
     win_onehot = jax.nn.one_hot(winner, P, axis=1, dtype=jnp.bool_) & granted[:, None, :]
     arb_pop = jnp.any(win_onehot, axis=2)  # [R, P_in]
-    chosen = {f: jnp.take_along_axis(h[f], winner, axis=1) for f in FLIT_FIELDS}
+    chosen = jnp.take_along_axis(h, winner[:, :, None], axis=1)  # [R, P_out, NF]
 
     rr = jnp.where(granted, (winner + 1) % P, st.rr_ptr)
-    is_tail = chosen["last"] > 0
+    is_tail = chosen[..., F_LAST] > 0
     wh = jnp.where(granted & ~is_tail, winner, st.wh_lock)
     wh = jnp.where(granted & is_tail, -1, wh)
 
@@ -141,12 +156,12 @@ def fabric_cycle(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarra
     out_valid = st.out_cnt > 0
 
     er, ep_p = tb.ep_attach[:, 0], tb.ep_attach[:, 1]
-    ep_flit = flit_gather(out_heads, er, ep_p)
+    ep_flit = out_heads[er, ep_p]  # [E, NF]
     ep_valid = out_valid[er, ep_p] & ep_ingress_space
 
     src_r, src_p = tb.link_src[..., 0], tb.link_src[..., 1]
     have_up = src_r >= 0
-    up_head = flit_gather(out_heads, jnp.clip(src_r, 0, R - 1), jnp.clip(src_p, 0, P - 1))
+    up_head = out_heads[jnp.clip(src_r, 0, R - 1), jnp.clip(src_p, 0, P - 1)]
     up_valid = out_valid[jnp.clip(src_r, 0, R - 1), jnp.clip(src_p, 0, P - 1)] & have_up
     # space after this cycle's arb pops (slot freed same cycle is reusable)
     in_cnt_after_pop = st.in_cnt - arb_pop.astype(jnp.int32)
@@ -170,17 +185,35 @@ def fabric_cycle(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarra
     return FabricState(in2, in_cnt2, out2, out_cnt2, rr, wh), ep_flit, ep_valid
 
 
-def inject(st: FabricState, tb: FabricTables, flit: dict, want: jnp.ndarray):
-    """Endpoints push one flit into their attached port's in_buf (seen by the
-    arbiter next cycle). flit fields [E]; want [E]. Returns (state, accepted)."""
-    Din = next(iter(st.in_buf.values())).shape[-1]
+def _inject_one(st: FabricState, tb: FabricTables, flit: jnp.ndarray, want: jnp.ndarray):
+    """Single-channel endpoint injection: flit [E, NF]; want [E]."""
+    Din = st.in_buf.shape[-2]
     R, P = st.in_cnt.shape
     er, ep_p = tb.ep_attach[:, 0], tb.ep_attach[:, 1]
     space = st.in_cnt[er, ep_p] < Din
     accepted = want & space
     push_mask = jnp.zeros((R, P), bool).at[er, ep_p].set(accepted)
-    flit_rp = {
-        f: jnp.zeros((R, P), jnp.int32).at[er, ep_p].set(flit[f]) for f in FLIT_FIELDS
-    }
+    flit_rp = jnp.zeros((R, P, NF), jnp.int32).at[er, ep_p].set(flit)
     in_buf, in_cnt = fifo_push(st.in_buf, st.in_cnt, push_mask, flit_rp)
     return FabricState(in_buf, in_cnt, st.out_buf, st.out_cnt, st.rr_ptr, st.wh_lock), accepted
+
+
+# channel-batched entry points: vmap the single-channel logic over the leading
+# channel axis of FabricState (tables and ingress space are shared).
+_cycle_all = jax.vmap(_cycle_one, in_axes=(0, None, None))
+_inject_all = jax.vmap(_inject_one, in_axes=(0, None, 0, 0))
+
+
+def fabric_cycle(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarray):
+    """One cycle of every channel at once.
+
+    ep_ingress_space: [E] bool — endpoint can accept one flit per channel this
+    cycle. Returns (state', ep_flit [C, E, NF], ep_valid [C, E])."""
+    return _cycle_all(st, tb, ep_ingress_space)
+
+
+def inject(st: FabricState, tb: FabricTables, flit: jnp.ndarray, want: jnp.ndarray):
+    """Endpoints push one flit per channel into their attached port's in_buf
+    (seen by the arbiter next cycle). flit [C, E, NF]; want [C, E].
+    Returns (state, accepted [C, E])."""
+    return _inject_all(st, tb, flit, want)

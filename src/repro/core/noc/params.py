@@ -38,6 +38,15 @@ class NocParams:
     egress_depth: int = 8
     memq_depth: int = 256  # >= fan-in x max_outstanding for the workloads used
 
+    # physical channels: req + rsp + (n_channels - 2) wide channels.
+    # 3 = the paper's req/rsp/wide; >3 stripes wide traffic over extra wide
+    # channels by TxnID (PATRONoC-style parallel AXI channels).
+    n_channels: int = 3
+
+    def __post_init__(self):
+        if self.n_channels < 3:
+            raise ValueError("n_channels must be >= 3 (req, rsp, >=1 wide)")
+
 
 # flit kinds
 NARROW_REQ = 0
@@ -47,13 +56,13 @@ WIDE_R = 3  # wide read data beat (wide link)
 WIDE_AW_W = 4  # wide write addr+data beats (wide link, wormhole)
 WIDE_B = 5  # write response (rsp link)
 
-# physical channels
+# physical channel roles (channel indices >= CH_WIDE are all wide channels;
+# the channel *count* lives in NocParams.n_channels)
 CH_REQ = 0
 CH_RSP = 1
 CH_WIDE = 2
-N_CHANNELS = 3
 
-# channel a kind travels on
+# role channel a kind travels on (wide kinds ride wide_channel_of(txn, C))
 KIND_CHANNEL = {
     NARROW_REQ: CH_REQ,
     NARROW_RSP: CH_RSP,
@@ -62,3 +71,13 @@ KIND_CHANNEL = {
     WIDE_AW_W: CH_WIDE,
     WIDE_B: CH_RSP,
 }
+
+
+def wide_channel_of(txn, n_channels: int):
+    """Physical channel carrying the wide beats of a transfer.
+
+    Wide traffic stripes over channels CH_WIDE..n_channels-1 by TxnID, so all
+    transfers of one TxnID share a channel (static routing + fixed channel
+    keeps same-TxnID responses in order). With the paper's n_channels=3 this
+    is always CH_WIDE."""
+    return CH_WIDE + txn % (n_channels - CH_WIDE)

@@ -1,21 +1,35 @@
-"""Full-system FlooNoC simulator: 3 physical channels (req/rsp/wide) +
-vectorized endpoints, stepped with jax.lax.scan (jit-compiled, cycle-accurate).
+"""Full-system FlooNoC simulator: a channel-batched fabric (req/rsp/wide plus
+optional extra wide channels, see NocParams.n_channels) + vectorized
+endpoints, stepped with jax.lax.scan (jit-compiled, cycle-accurate).
+
+The scan step body contains no Python loop over channels: the fabric is
+vmapped over a leading channel axis and the endpoint egress/ingest paths carry
+the same axis, so trace size and compile time are independent of the channel
+count.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
+import dataclasses
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.noc import engine as eng
 from repro.core.noc import endpoints as epm
+from repro.core.noc import engine as eng
+from repro.core.noc.engine import (
+    F_DST,
+    F_KIND,
+    F_LAST,
+    F_META,
+    F_SRC,
+    F_TS,
+    F_TXN,
+)
 from repro.core.noc.params import (
     CH_REQ,
     CH_RSP,
-    CH_WIDE,
     NARROW_REQ,
     NARROW_RSP,
     WIDE_AR,
@@ -23,6 +37,7 @@ from repro.core.noc.params import (
     WIDE_B,
     WIDE_R,
     NocParams,
+    wide_channel_of,
 )
 from repro.core.noc.topology import Topology
 
@@ -30,85 +45,81 @@ from repro.core.noc.topology import Topology
 @jax.tree_util.register_dataclass
 @dataclass
 class SimState:
-    fabrics: list  # [3] FabricState
+    fabric: eng.FabricState  # channel-batched [C, ...]
     eps: epm.EndpointState
     cycle: jnp.ndarray
 
 
-def _flit(dst, src, kind, txn, last, ts, meta):
-    def arr(v, ref):
-        return jnp.broadcast_to(jnp.asarray(v, jnp.int32), ref.shape)
+def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
+    """Process delivered flits on all channels at once.
 
-    return {
-        "dst": dst, "src": src, "kind": arr(kind, dst), "txn": txn,
-        "last": arr(last, dst), "ts": arr(ts, dst), "meta": arr(meta, dst),
-    }
-
-
-def _ingest(st: epm.EndpointState, deliver, cycle, params: NocParams, wl, is_hbm):
-    """Process delivered flits on all three channels. deliver: {ch: (flit, valid)}."""
+    flits: [C, E, NF]; valid: [C, E]. Narrow requests / responses ride their
+    role channels (CH_REQ / CH_RSP); wide kinds are recognized by kind on any
+    wide channel, so counters are scatter-summed over the channel axis."""
     E = st.lat_sum.shape[0]
     eidx = jnp.arange(E)
     ni_cnt, ni_dst, rob = st.ni_cnt, st.ni_dst, st.rob_credit
+    kind = flits[..., F_KIND]  # [C, E]
 
     # ---- req channel: we are the target ----
-    f, v = deliver[CH_REQ]
-    is_nreq = v & (f["kind"] == NARROW_REQ)
-    is_war = v & (f["kind"] == WIDE_AR)
-    mq, mq_cnt = st.mq, st.mq_cnt
+    f = flits[CH_REQ]
+    v = valid[CH_REQ]
+    is_nreq = v & (f[:, F_KIND] == NARROW_REQ)
+    is_war = v & (f[:, F_KIND] == WIDE_AR)
     # narrow reads: the multi-banked L1 SPM is fully pipelined (1 req/cycle
     # throughput); model as a fixed-latency response through the egress delay
     # queue. Wide bursts go through the serializing memory server below.
-    eg, eg_ready, eg_cnt = st.eg, st.eg_ready, st.eg_cnt
-    rsp_flit = _flit(f["src"], jnp.arange(is_nreq.shape[0], dtype=jnp.int32),
-                     NARROW_RSP, f["txn"], 1, 0, 1)
-    rsp_flit["ts"] = f["ts"]
+    rsp_flit = eng.pack_flit(f[:, F_SRC], eidx, NARROW_RSP, f[:, F_TXN], 1,
+                             f[:, F_TS], 1)
     rsp_ready = jnp.broadcast_to(
         cycle + params.ni_rsp_lat + params.mem_lat + params.ni_req_lat,
-        is_nreq.shape).astype(jnp.int32)
-    eg, eg_ready, eg_cnt = epm._eg_push(eg, eg_ready, eg_cnt, CH_RSP, is_nreq,
-                                        rsp_flit, rsp_ready)
-    mq, mq_cnt = _push2(st, mq, mq_cnt, is_war, f["src"], f["txn"], f["meta"], WIDE_R, f["ts"])
+        (E,)).astype(jnp.int32)
+    eg, eg_ready, eg_cnt = epm._eg_push(st.eg, st.eg_ready, st.eg_cnt, CH_RSP,
+                                        is_nreq, rsp_flit, rsp_ready)
+    mq, mq_cnt = epm._mq_push(st.mq, st.mq_cnt, is_war, f[:, F_SRC],
+                              f[:, F_TXN], f[:, F_META], WIDE_R, f[:, F_TS])
 
-    # ---- wide channel ----
-    f, v = deliver[CH_WIDE]
+    # ---- wide kinds (any channel) ----
+    S = st.d_outst.shape[1]  # streams
+    eb = jnp.broadcast_to(eidx, valid.shape)  # [C, E]
+    stream = jnp.clip(flits[..., F_TXN], 0, S - 1)
     # read data beats coming back to us (we are the issuer)
-    is_r = v & (f["kind"] == WIDE_R)
-    C = st.d_outst.shape[1]
-    stream = jnp.clip(f["txn"], 0, C - 1)
-    d_beats_got = st.d_beats_got.at[eidx, stream].add(is_r.astype(jnp.int32))
-    beats_rcvd = st.beats_rcvd + is_r.astype(jnp.int32)
-    r_done = is_r & (f["last"] > 0)
-    d_outst = st.d_outst.at[eidx, stream].add(-r_done.astype(jnp.int32))
-    d_done = st.d_done.at[eidx, stream].add(r_done.astype(jnp.int32))
+    is_r = valid & (kind == WIDE_R)
+    d_beats_got = st.d_beats_got.at[eb, stream].add(is_r.astype(jnp.int32))
+    r_done = is_r & (flits[..., F_LAST] > 0)
+    d_outst = st.d_outst.at[eb, stream].add(-r_done.astype(jnp.int32))
+    d_done = st.d_done.at[eb, stream].add(r_done.astype(jnp.int32))
     full_beats = jnp.full((E,), wl.dma_beats, jnp.int32)
-    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, r_done, f["txn"],
-                                         full_beats, params)
+    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, r_done,
+                                         flits[..., F_TXN], full_beats, params)
     # write bursts arriving (we are the target); wormhole => no interleave
-    is_w = v & (f["kind"] == WIDE_AW_W)
-    beats_rcvd = beats_rcvd + is_w.astype(jnp.int32)
-    any_beat = is_r | is_w
-    last_rx = jnp.where(any_beat, jnp.broadcast_to(cycle, any_beat.shape).astype(jnp.int32), st.last_rx)
-    first_rx = jnp.where(any_beat & (st.first_rx < 0),
-                         jnp.broadcast_to(cycle, any_beat.shape).astype(jnp.int32), st.first_rx)
-    w_tail = is_w & (f["last"] > 0)
-    mq, mq_cnt = _push2(st, mq, mq_cnt, w_tail, f["src"], f["txn"], 1, WIDE_B, f["ts"])
+    is_w = valid & (kind == WIDE_AW_W)
+    beats_rcvd = st.beats_rcvd + (is_r | is_w).sum(axis=0)
+    any_beat = (is_r | is_w).any(axis=0)
+    cyc_e = jnp.broadcast_to(cycle, (E,)).astype(jnp.int32)
+    last_rx = jnp.where(any_beat, cyc_e, st.last_rx)
+    first_rx = jnp.where(any_beat & (st.first_rx < 0), cyc_e, st.first_rx)
+    w_tail = is_w & (flits[..., F_LAST] > 0)
+    mq, mq_cnt = epm._mq_push_multi(mq, mq_cnt, w_tail, flits[..., F_SRC],
+                                    flits[..., F_TXN], 1, WIDE_B,
+                                    flits[..., F_TS])
 
     # ---- rsp channel ----
-    f, v = deliver[CH_RSP]
-    is_nrsp = v & (f["kind"] == NARROW_RSP)
+    f = flits[CH_RSP]
+    v = valid[CH_RSP]
+    is_nrsp = v & (f[:, F_KIND] == NARROW_RSP)
     rx_const = params.cluster_rsp_lat
-    lat_sum = st.lat_sum + jnp.where(is_nrsp, (cycle - f["ts"] + rx_const).astype(jnp.float32), 0.0)
+    lat_sum = st.lat_sum + jnp.where(
+        is_nrsp, (cycle - f[:, F_TS] + rx_const).astype(jnp.float32), 0.0)
     lat_cnt = st.lat_cnt + is_nrsp.astype(jnp.int32)
-    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, is_nrsp, f["txn"], 1, params)
-    is_b = v & (f["kind"] == WIDE_B)
-    stream_b = jnp.clip(f["txn"], 0, C - 1)
+    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, is_nrsp,
+                                         f[:, F_TXN], 1, params)
+    is_b = v & (f[:, F_KIND] == WIDE_B)
+    stream_b = jnp.clip(f[:, F_TXN], 0, S - 1)
     d_outst = d_outst.at[eidx, stream_b].add(-is_b.astype(jnp.int32))
     d_done = d_done.at[eidx, stream_b].add(is_b.astype(jnp.int32))
-    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, is_b, f["txn"],
+    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, is_b, f[:, F_TXN],
                                          jnp.full((E,), wl.dma_beats), params)
-
-    import dataclasses
 
     return dataclasses.replace(
         st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob, mq=mq, mq_cnt=mq_cnt,
@@ -118,18 +129,8 @@ def _ingest(st: epm.EndpointState, deliver, cycle, params: NocParams, wl, is_hbm
     )
 
 
-def _push2(st, mq, mq_cnt, mask, src, txn, beats, kind, ts):
-    tmp = st
-    import dataclasses
-
-    tmp = dataclasses.replace(st, mq=mq, mq_cnt=mq_cnt)
-    return epm._mq_push(tmp, mask, src, txn, beats, kind, ts)
-
-
 def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
     """Narrow + DMA request generation into egress queues."""
-    import dataclasses
-
     E = st.lat_sum.shape[0]
     eidx = jnp.arange(E)
     eg, eg_ready, eg_cnt = st.eg, st.eg_ready, st.eg_cnt
@@ -156,7 +157,7 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
     space_n = eg_cnt[CH_REQ] < EQ
     fire_n = want_n & ok_n & space_n
     stall_n = want_n & ~ok_n
-    flit_n = _flit(dst_n, eidx.astype(jnp.int32), NARROW_REQ, txn_n, 1, cycle, 1)
+    flit_n = eng.pack_flit(dst_n, eidx, NARROW_REQ, txn_n, 1, cycle, 1)
     eg, eg_ready, eg_cnt = epm._eg_push(
         eg, eg_ready, eg_cnt, CH_REQ, fire_n, flit_n,
         jnp.broadcast_to(cycle + src_delay, (E,)).astype(jnp.int32))
@@ -168,46 +169,44 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
     n_sent = st.n_sent + fire_n.astype(jnp.int32)
 
     # ---- DMA: pick one eligible stream per endpoint (rotating priority) ----
-    C = st.d_outst.shape[1]
-    dma_dst_t = jnp.asarray(wl.dma_dst)  # [E, C]
+    S = st.d_outst.shape[1]
+    dma_dst_t = jnp.asarray(wl.dma_dst)  # [E, S]
     dma_alt_t = jnp.asarray(wl.dma_alt_dst)
     txn_of_stream = (
-        jnp.arange(C, dtype=jnp.int32)[None, :] % T
+        jnp.arange(S, dtype=jnp.int32)[None, :] % T
         if wl.unique_txn_per_stream
-        else jnp.zeros((1, C), jnp.int32)
+        else jnp.zeros((1, S), jnp.int32)
     )
-    txn_of_stream = jnp.broadcast_to(txn_of_stream, (E, C))
-    # per-(e, c) desired destination for the *next* transfer
+    txn_of_stream = jnp.broadcast_to(txn_of_stream, (E, S))
+    # per-(e, s) desired destination for the *next* transfer
     odd = (st.d_seq % 2) == 1
-    dst_ec = jnp.where((dma_alt_t >= 0) & odd, dma_alt_t, dma_dst_t)
-    dst_ec = jnp.where(
+    dst_es = jnp.where((dma_alt_t >= 0) & odd, dma_alt_t, dma_dst_t)
+    dst_es = jnp.where(
         dma_dst_t == -2,
-        _uniform_dst(eidx[:, None], st.d_seq * C + jnp.arange(C)[None, :], cycle, n_tiles),
-        dst_ec,
+        _uniform_dst(eidx[:, None], st.d_seq * S + jnp.arange(S)[None, :], cycle, n_tiles),
+        dst_es,
     ).astype(jnp.int32)
-    beats = jnp.full((E, C), wl.dma_beats, jnp.int32)
+    beats = jnp.full((E, S), wl.dma_beats, jnp.int32)
     st_tmp = dataclasses.replace(st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob)
-    ok_ec = jnp.stack(
-        [epm._ni_check(st_tmp, txn_of_stream[:, c], dst_ec[:, c], params, beats[:, c])
-         for c in range(C)], axis=1)
-    want_ec = (st.d_txns_left > 0) & (st.d_outst < params.max_outstanding) & (dma_dst_t != -1)
-    elig = want_ec & ok_ec
+    ok_es = epm._ni_check(st_tmp, txn_of_stream, dst_es, params, beats)
+    want_es = (st.d_txns_left > 0) & (st.d_outst < params.max_outstanding) & (dma_dst_t != -1)
+    elig = want_es & ok_es
     # rotating pick
-    rot = (jnp.arange(C)[None, :] - (cycle + eidx[:, None])) % C
-    score = jnp.where(elig, rot, C + 1)
+    rot = (jnp.arange(S)[None, :] - (cycle + eidx[:, None])) % S
+    score = jnp.where(elig, rot, S + 1)
     pick = jnp.argmin(score, axis=1)
-    any_pick = jnp.take_along_axis(score, pick[:, None], axis=1)[:, 0] <= C
-    stall_d = jnp.any(want_ec & ~ok_ec, axis=1) & ~any_pick
+    any_pick = jnp.take_along_axis(score, pick[:, None], axis=1)[:, 0] <= S
+    stall_d = jnp.any(want_es & ~ok_es, axis=1) & ~any_pick
 
-    pick_dst = dst_ec[eidx, pick]
+    pick_dst = dst_es[eidx, pick]
     pick_txn = txn_of_stream[eidx, pick]
     pick_beats = beats[eidx, pick]
 
     if not wl.dma_write:
         space_r = eg_cnt[CH_REQ] < EQ
         fire_d = any_pick & space_r
-        flit_ar = _flit(pick_dst, eidx.astype(jnp.int32), WIDE_AR, pick_txn, 1,
-                        cycle, pick_beats)
+        flit_ar = eng.pack_flit(pick_dst, eidx, WIDE_AR, pick_txn, 1, cycle,
+                                pick_beats)
         eg, eg_ready, eg_cnt = epm._eg_push(
             eg, eg_ready, eg_cnt, CH_REQ, fire_d, flit_ar,
             jnp.broadcast_to(cycle + src_delay, (E,)).astype(jnp.int32))
@@ -233,13 +232,13 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
     beats_sent = st.beats_sent
     if wl.dma_write:
         active = w_stream >= 0
-        space_w = eg_cnt[CH_WIDE] < EQ
+        wch = wide_channel_of(jnp.clip(w_txn, 0, None), params.n_channels)
+        space_w = jnp.take_along_axis(eg_cnt, wch[None, :], axis=0)[0] < EQ
         emit = active & space_w
-        last = (w_left == 1).astype(jnp.int32)
-        flit_w = _flit(w_dst, eidx.astype(jnp.int32), WIDE_AW_W, w_txn, 0, w_ts, w_left)
-        flit_w["last"] = jnp.where(emit, last, 0)
+        last = jnp.where(emit, (w_left == 1).astype(jnp.int32), 0)
+        flit_w = eng.pack_flit(w_dst, eidx, WIDE_AW_W, w_txn, last, w_ts, w_left)
         eg, eg_ready, eg_cnt = epm._eg_push(
-            eg, eg_ready, eg_cnt, CH_WIDE, emit, flit_w,
+            eg, eg_ready, eg_cnt, wch, emit, flit_w,
             jnp.broadcast_to(cycle + 1, (E,)).astype(jnp.int32))
         beats_sent = beats_sent + emit.astype(jnp.int32)
         w_left = jnp.where(emit, w_left - 1, w_left)
@@ -264,8 +263,6 @@ def _uniform_dst(e, seq, cycle, n_tiles):
 
 def _memory(st: epm.EndpointState, cycle, params: NocParams, is_hbm, is_mem):
     """Memory server: pop requests, serve after latency, emit response beats."""
-    import dataclasses
-
     E = st.lat_sum.shape[0]
     eidx = jnp.arange(E)
     EQ = st.eg_ready.shape[-1]
@@ -277,42 +274,34 @@ def _memory(st: epm.EndpointState, cycle, params: NocParams, is_hbm, is_mem):
     m_busy = jnp.maximum(st.m_busy - 1, 0)
     # pop next request when idle
     can_pop = ~st.m_active & (st.mq_cnt > 0) & is_mem
-    head = {f: st.mq[f][:, 0] for f in epm.MQ_FIELDS}
-    mq = {
-        f: jnp.where(can_pop[:, None], jnp.roll(st.mq[f], -1, axis=-1), st.mq[f])
-        for f in epm.MQ_FIELDS
-    }
+    head = st.mq[:, 0]  # [E, NMQ]
+    mq = jnp.where(can_pop[:, None, None], jnp.roll(st.mq, -1, axis=1), st.mq)
     mq_cnt = st.mq_cnt - can_pop.astype(jnp.int32)
     m_active = st.m_active | can_pop
     m_busy = jnp.where(can_pop, params.mem_lat + params.ni_rsp_lat, m_busy)
-    m_beats = jnp.where(can_pop, head["beats"], st.m_beats)
-    m_flit = {
-        f: jnp.where(can_pop, v, st.m_flit[f])
-        for f, v in {
-            "dst": head["src"], "src": eidx.astype(jnp.int32), "kind": head["kind"],
-            "txn": head["txn"], "last": jnp.zeros((E,), jnp.int32),
-            "ts": head["ts"], "meta": head["beats"],
-        }.items()
-    }
+    m_beats = jnp.where(can_pop, head[:, epm.MQ_BEATS], st.m_beats)
+    new_flit = eng.pack_flit(head[:, epm.MQ_SRC], eidx, head[:, epm.MQ_KIND],
+                             head[:, epm.MQ_TXN], 0, head[:, epm.MQ_TS],
+                             head[:, epm.MQ_BEATS])
+    m_flit = jnp.where(can_pop[:, None], new_flit, st.m_flit)
 
-    # emit a beat when serving
-    ch_of_kind = jnp.where(m_flit["kind"] == WIDE_R, CH_WIDE, CH_RSP)
-    tok_ok = jnp.where(is_hbm & (m_flit["kind"] == WIDE_R), hbm_tok >= 1.0, True)
-    eg_cnt = st.eg_cnt
-    space = jnp.where(ch_of_kind == CH_WIDE, eg_cnt[CH_WIDE] < EQ, eg_cnt[CH_RSP] < EQ)
+    # emit a beat when serving (channel picked per endpoint: wide reads stripe
+    # over the wide channels by TxnID, B responses ride rsp)
+    is_wide_r = m_flit[:, F_KIND] == WIDE_R
+    wch = wide_channel_of(jnp.clip(m_flit[:, F_TXN], 0, None), params.n_channels)
+    ch_of_kind = jnp.where(is_wide_r, wch, CH_RSP)
+    tok_ok = jnp.where(is_hbm & is_wide_r, hbm_tok >= 1.0, True)
+    space = jnp.take_along_axis(st.eg_cnt, ch_of_kind[None, :], axis=0)[0] < EQ
     emit = m_active & (m_busy == 0) & tok_ok & space & (m_beats > 0)
-    out = dict(m_flit)
-    out["last"] = (m_beats == 1).astype(jnp.int32)
-    out["meta"] = m_beats
+    out = m_flit.at[:, F_LAST].set((m_beats == 1).astype(jnp.int32))
+    out = out.at[:, F_META].set(m_beats)
     ready = jnp.broadcast_to(cycle + params.ni_req_lat, (E,)).astype(jnp.int32)
 
-    eg, eg_ready_, eg_cnt = st.eg, st.eg_ready, st.eg_cnt
-    for ch in (CH_RSP, CH_WIDE):
-        m = emit & (ch_of_kind == ch)
-        eg, eg_ready_, eg_cnt = epm._eg_push(eg, eg_ready_, eg_cnt, ch, m, out, ready)
+    eg, eg_ready_, eg_cnt = epm._eg_push(st.eg, st.eg_ready, st.eg_cnt,
+                                         ch_of_kind, emit, out, ready)
 
-    hbm_tok = jnp.where(is_hbm & emit & (m_flit["kind"] == WIDE_R), hbm_tok - 1.0, hbm_tok)
-    hbm_served = st.hbm_served + (emit & is_hbm & (m_flit["kind"] == WIDE_R)).astype(jnp.int32)
+    hbm_tok = jnp.where(is_hbm & emit & is_wide_r, hbm_tok - 1.0, hbm_tok)
+    hbm_served = st.hbm_served + (emit & is_hbm & is_wide_r).astype(jnp.int32)
     m_beats = jnp.where(emit, m_beats - 1, m_beats)
     m_active = m_active & ~(emit & (m_beats == 0))
 
@@ -331,49 +320,54 @@ class Sim:
     tables: eng.FabricTables
     is_hbm: jnp.ndarray
     is_mem: jnp.ndarray
+    _jit_cache: dict = field(default_factory=dict, repr=False, compare=False)
 
     def init_state(self) -> SimState:
-        fabrics = [
-            eng.init_fabric(self.topo, self.params.depth_in, self.params.depth_out)
-            for _ in range(3)
-        ]
+        fabric = eng.init_fabric(self.topo, self.params.depth_in,
+                                 self.params.depth_out, self.params.n_channels)
         eps = epm.init_endpoints(self.topo.n_endpoints, self.params, self.wl.n_streams)
-        txns = jnp.asarray(self.wl.dma_txns)
-        import dataclasses
+        eps = dataclasses.replace(eps, d_txns_left=jnp.asarray(self.wl.dma_txns))
+        return SimState(fabric=fabric, eps=eps, cycle=jnp.zeros((), jnp.int32))
 
-        eps = dataclasses.replace(eps, d_txns_left=txns)
-        return SimState(fabrics=fabrics, eps=eps, cycle=jnp.zeros((), jnp.int32))
-
-    def step(self, st: SimState) -> SimState:
-        import dataclasses
-
+    def step(self, st: SimState):
+        """One simulated cycle. Returns (state', (ep_flit [C, E, NF],
+        ep_valid [C, E])) — the per-channel endpoint deliveries."""
         cycle = st.cycle
         E = self.topo.n_endpoints
-        # 1) fabric cycles (endpoints always have ingest capacity: processing
-        #    is combinational on delivery)
+        # 1) fabric cycle, all channels at once (endpoints always have ingest
+        #    capacity: processing is combinational on delivery)
         space = jnp.ones((E,), bool)
-        deliver = {}
-        fabrics = []
-        for ch in range(3):
-            f_st, ep_flit, ep_valid = eng.fabric_cycle(st.fabrics[ch], self.tables, space)
-            fabrics.append(f_st)
-            deliver[ch] = (ep_flit, ep_valid)
+        fabric, ep_flit, ep_valid = eng.fabric_cycle(st.fabric, self.tables, space)
         # 2) endpoint processing
-        eps = _ingest(st.eps, deliver, cycle, self.params, self.wl, self.is_hbm)
+        eps = _ingest(st.eps, ep_flit, ep_valid, cycle, self.params, self.wl)
         eps = _generators(eps, cycle, self.params, self.wl, self.wl.n_tiles)
         eps = _memory(eps, cycle, self.params, self.is_hbm, self.is_mem)
-        # 3) egress -> injection (heads whose ready time has come)
-        for ch in range(3):
-            head = {f: eps.eg[f][ch, :, 0] for f in eng.FLIT_FIELDS}
-            ready = (eps.eg_cnt[ch] > 0) & (eps.eg_ready[ch, :, 0] <= cycle)
-            fabrics[ch], accepted = eng.inject(fabrics[ch], self.tables, head, ready)
-            eg, eg_ready, eg_cnt = epm._eg_pop(eps.eg, eps.eg_ready, eps.eg_cnt, ch, accepted)
-            eps = dataclasses.replace(eps, eg=eg, eg_ready=eg_ready, eg_cnt=eg_cnt)
-        return SimState(fabrics=fabrics, eps=eps, cycle=cycle + 1)
+        # 3) egress -> injection: every channel's head whose ready time came
+        head = eps.eg[:, :, 0, :]  # [C, E, NF]
+        ready = (eps.eg_cnt > 0) & (eps.eg_ready[:, :, 0] <= cycle)  # [C, E]
+        fabric, accepted = eng.inject(fabric, self.tables, head, ready)
+        eg, eg_ready, eg_cnt = epm._eg_pop(eps.eg, eps.eg_ready, eps.eg_cnt, accepted)
+        eps = dataclasses.replace(eps, eg=eg, eg_ready=eg_ready, eg_cnt=eg_cnt)
+        return SimState(fabric=fabric, eps=eps, cycle=cycle + 1), (ep_flit, ep_valid)
+
+    def _scan_fn(self, n_cycles: int, with_trace: bool):
+        """One jitted scan over the step body, cached per (length, trace)."""
+        key = (n_cycles, with_trace)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            @jax.jit
+            def fn(st):
+                def body(s, _):
+                    s2, deliver = self.step(s)
+                    return s2, (deliver if with_trace else None)
+
+                return jax.lax.scan(body, st, None, length=n_cycles)
+
+            self._jit_cache[key] = fn
+        return fn
 
 
 def build_sim(topo: Topology, params: NocParams, wl: epm.Workload) -> Sim:
-    n_tiles = wl.n_tiles
     E = topo.n_endpoints
     is_hbm = np.zeros((E,), bool)
     n_hbm = topo.meta.get("n_hbm", 0)
@@ -388,52 +382,15 @@ def build_sim(topo: Topology, params: NocParams, wl: epm.Workload) -> Sim:
 
 def run(sim: Sim, n_cycles: int, state: SimState | None = None) -> SimState:
     st = state if state is not None else sim.init_state()
-
-    @jax.jit
-    def many(st):
-        def body(s, _):
-            return sim.step(s), None
-
-        s, _ = jax.lax.scan(body, st, None, length=n_cycles)
-        return s
-
-    return many(st)
+    s, _ = sim._scan_fn(n_cycles, with_trace=False)(st)
+    return s
 
 
 def run_trace(sim: Sim, n_cycles: int, state: SimState | None = None):
-    """Like run(), but also returns per-cycle endpoint deliveries
-    {channel: (flit fields [T, E], valid [T, E])} for invariant checks."""
+    """Like run(), but also returns the per-cycle endpoint deliveries
+    (flits [T, C, E, NF], valid [T, C, E]) for invariant checks."""
     st = state if state is not None else sim.init_state()
-
-    @jax.jit
-    def many(st):
-        def body(s, _):
-            cycle = s.cycle
-            E = sim.topo.n_endpoints
-            space = jnp.ones((E,), bool)
-            deliver = {}
-            fabrics = []
-            for ch in range(3):
-                f_st, ep_flit, ep_valid = eng.fabric_cycle(s.fabrics[ch], sim.tables, space)
-                fabrics.append(f_st)
-                deliver[ch] = (ep_flit, ep_valid)
-            eps = _ingest(s.eps, deliver, cycle, sim.params, sim.wl, sim.is_hbm)
-            eps = _generators(eps, cycle, sim.params, sim.wl, sim.wl.n_tiles)
-            eps = _memory(eps, cycle, sim.params, sim.is_hbm, sim.is_mem)
-            import dataclasses as dc
-
-            for ch in range(3):
-                head = {f: eps.eg[f][ch, :, 0] for f in eng.FLIT_FIELDS}
-                ready = (eps.eg_cnt[ch] > 0) & (eps.eg_ready[ch, :, 0] <= cycle)
-                fabrics[ch], accepted = eng.inject(fabrics[ch], sim.tables, head, ready)
-                eg, eg_ready, eg_cnt = epm._eg_pop(eps.eg, eps.eg_ready, eps.eg_cnt, ch, accepted)
-                eps = dc.replace(eps, eg=eg, eg_ready=eg_ready, eg_cnt=eg_cnt)
-            return SimState(fabrics=fabrics, eps=eps, cycle=cycle + 1), deliver
-
-        s, trace = jax.lax.scan(body, st, None, length=n_cycles)
-        return s, trace
-
-    return many(st)
+    return sim._scan_fn(n_cycles, with_trace=True)(st)
 
 
 def stats(sim: Sim, st: SimState) -> dict:

@@ -300,6 +300,8 @@ def model_flops_per_device(cfg, shape, n_devices: int) -> float:
 def analyze(compiled, cfg, shape, n_devices: int, *, remat: bool = True,
             block: int = 512, cf: float = 2.0, cache_quant: bool = False) -> Roofline:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per partition
+        ca = ca[0] if ca else {}
     est = FL.estimate(cfg, shape, block=block, cf=cf, remat=remat,
                       cache_quant=cache_quant).per_device(n_devices)
     coll = parse_collectives(

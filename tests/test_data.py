@@ -1,6 +1,8 @@
 """Data pipeline: determinism, resumability, shard independence, prefetch."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
