@@ -1,6 +1,9 @@
-"""FlooNoC-layer microbench: bucketing overhead, NoC-aware scheduler picks,
-and the ordering microbench as a transport-level summary."""
+"""FlooNoC-layer microbench: collectives on the cycle-level fabric
+(measured vs the simulator-calibrated analytical model, multi-stream
+multicast), bucketing overhead, and NoC-aware scheduler picks."""
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -8,10 +11,69 @@ import jax.numpy as jnp
 from benchmarks.common import row, timed
 from repro.core import collectives as coll
 from repro.core import scheduler as sched
+from repro.core.noc import collective_traffic as CT
+from repro.core.noc import sim as S
+from repro.core.noc.params import NocParams
+from repro.core.noc.topology import build_mesh
 
 
-def bench(full: bool = False) -> list[dict]:
+def _fabric_collectives(nx: int, ny: int, n_cycles: int, configs) -> list[dict]:
+    """Run collective schedules on the cycle-level fabric and report
+    measured completion cycles against the calibrated analytical model.
+    Shape-compatible schedules (same stream count and step count) batch
+    through ONE vmapped sweep; the rest run singly."""
+    topo = build_mesh(nx=nx, ny=ny)
+    params = NocParams()
     rows = []
+    groups: dict[tuple, list] = {}
+    for name, kw in configs:
+        sc = CT.build(topo, name, **kw)
+        groups.setdefault((sc.n_streams, sc.n_steps), []).append(
+            (name, kw, sc))
+    for (streams, _), members in groups.items():
+        wls = [CT.to_workload(topo, sc) for _, _, sc in members]
+        sim = S.build_sim(topo, params, wls[0])
+        sts = S.run_sweep(sim, wls, n_cycles) if len(wls) > 1 \
+            else [S.run(sim, n_cycles)]
+        for (name, kw, sc), st in zip(members, sts):
+            out = S.stats(sim, st)
+            meas = CT.measured_cycles(out, topo)
+            est = CT.analytical_cycles(sc, params)
+            delivered = bool(np.array_equal(out["rx_bursts"], sc.expect_rx))
+            tag = f"{name}_s{streams}"
+            rows.append(row(f"coll/fabric/{nx}x{ny}/{tag}_cycles", 0.0, meas,
+                            target=round(est, 1), rel_tol=0.15))
+            rows.append(row(f"coll/fabric/{nx}x{ny}/{tag}_delivered", 0.0,
+                            int(delivered), target=1, rel_tol=0.01))
+    return rows
+
+
+def bench(full: bool = False, smoke: bool = False) -> list[dict]:
+    if smoke:
+        return _fabric_collectives(
+            nx=2, ny=2, n_cycles=300,
+            configs=[("all-reduce", dict(data_kb=1)),
+                     ("all-gather", dict(data_kb=1))])
+    rows = []
+    # ---- collectives on the cycle-level fabric vs calibrated model ----
+    kb = dict(data_kb=16)
+    rows += _fabric_collectives(
+        nx=4, ny=4, n_cycles=2600,
+        configs=[("all-gather", kb), ("reduce-scatter", kb), ("barrier", {}),
+                 ("multicast", dict(data_kb=4)), ("all-reduce", kb),
+                 ("all-reduce", dict(data_kb=16, streams=2)),
+                 ("all-reduce-2d", kb)])
+    # multi-stream multicast: independent TxnIDs remove the RoB-less NI's
+    # destination-change round-trip serialization (paper Sec. III/IV at
+    # collective level)
+    topo = build_mesh(nx=4, ny=4)
+    cyc = {}
+    for streams in (1, 4):
+        sc = CT.build(topo, "multicast", data_kb=4, streams=streams)
+        sim = S.build_sim(topo, NocParams(), CT.to_workload(topo, sc))
+        cyc[streams] = CT.measured_cycles(S.stats(sim, S.run(sim, 2600)), topo)
+    rows.append(row("coll/fabric/multicast_multistream_speedup_x", 0.0,
+                    round(cyc[1] / cyc[4], 2), target=1.2, cmp="ge"))
     # bucket pack/unpack throughput (1-device; pure data movement)
     tree = {f"w{i}": jnp.ones((256, 256), jnp.float32) for i in range(12)}
     plan = coll.plan_buckets(tree, 4)

@@ -10,18 +10,25 @@ from repro.core.noc.params import NocParams
 from repro.core.noc.topology import build_mesh
 
 
-def _completion(order, streams, alternate, unique_txn, cycles=4000):
-    topo = build_mesh(nx=4, ny=4)
+def _completion(order, streams, alternate, unique_txn, cycles=4000,
+                n_txns=16, ny=4):
+    topo = build_mesh(nx=4, ny=ny)
     wl = T.ordering_workload(topo, streams=streams, alternate=alternate,
-                             unique_txn=unique_txn, n_txns=16, transfer_kb=1)
+                             unique_txn=unique_txn, n_txns=n_txns, transfer_kb=1)
     sim = S.build_sim(topo, NocParams(ni_order=order), wl)
     st, us = timed(lambda: S.run(sim, cycles), iters=1)
     out = S.stats(sim, st)
     return int(out["last_rx"][0]), int(out["ni_stalls"][0]), us
 
 
-def bench(full: bool = False) -> list[dict]:
+def bench(full: bool = False, smoke: bool = False) -> list[dict]:
     rows = []
+    if smoke:
+        t1, s1, us1 = _completion("robless", 1, True, False, cycles=800,
+                                  n_txns=4, ny=2)
+        rows.append(row("fig10/smoke_robless_1stream_stalls", us1, s1,
+                        target=1, cmp="ge"))
+        return rows
     for c in (1, 2, 3, 4):
         for order in ("rob", "robless"):
             a = A.tile_ordering_area_kge(order, c)

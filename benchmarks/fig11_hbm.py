@@ -14,8 +14,8 @@ from repro.core.noc.params import NocParams
 from repro.core.noc.topology import build_mesh, build_occamy
 
 
-def _floo(full_load, n_txns=8, cycles=16000):
-    topo = build_mesh(nx=4, ny=8)
+def _floo(full_load, n_txns=8, cycles=16000, ny=8):
+    topo = build_mesh(nx=4, ny=ny)
     wl = T.hbm_workload(topo, full_load=full_load, n_txns=n_txns, transfer_kb=4)
     sim = S.build_sim(topo, NocParams(), wl)
     st, us = timed(lambda: S.run(sim, cycles), iters=1)
@@ -53,8 +53,12 @@ def _agg_util(out, n_tiles, n_channels):
     return beats / makespan / p.hbm_rate / n_channels
 
 
-def bench(full: bool = False) -> list[dict]:
+def bench(full: bool = False, smoke: bool = False) -> list[dict]:
     rows = []
+    if smoke:
+        uz, _, us = _floo(full_load=False, n_txns=2, cycles=1200, ny=2)
+        return [row("fig11a/smoke_zero_load_util", us,
+                    round(float(uz.mean()), 3), target=0.97, rel_tol=0.2)]
     uz, _, us = _floo(full_load=False, cycles=6000)
     rows.append(row("fig11a/floonoc_zero_load_util", us, round(float(uz.mean()), 3),
                     target=0.97, rel_tol=0.08))

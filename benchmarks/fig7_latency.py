@@ -25,7 +25,11 @@ def _lat(topo, src, dst, cycles=900):
     return float(S.stats(sim, st)["narrow_lat_mean"][src]), us
 
 
-def bench(full: bool = False) -> list[dict]:
+def bench(full: bool = False, smoke: bool = False) -> list[dict]:
+    if smoke:
+        lat1, us = _lat(build_mesh(nx=4, ny=2), 0, 1, cycles=300)
+        return [row("fig7/smoke_neighbor_roundtrip_cycles", us, lat1,
+                    target=22, rel_tol=0.01)]
     topo = build_mesh(nx=4, ny=8)
     rows = []
     lat1, us = _lat(topo, 0, 1)

@@ -23,7 +23,13 @@ def _util(topo, pattern, kb, txns, cycles):
     return util, done, us
 
 
-def bench(full: bool = False) -> list[dict]:
+def bench(full: bool = False, smoke: bool = False) -> list[dict]:
+    if smoke:
+        util, done, us = _util(build_mesh(nx=4, ny=2), "neighbor", 1,
+                               txns=2, cycles=600)
+        return [row("fig8/smoke_util_neighbor_1kB", us, round(util, 3)),
+                row("fig8/smoke_done_frac", 0.0, round(done, 2), target=1,
+                    rel_tol=0.01)]
     topo = build_mesh(nx=4, ny=8)
     rows = []
     sizes = [1, 8, 32] if full else [8, 32]

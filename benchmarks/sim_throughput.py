@@ -1,5 +1,6 @@
 """Simulator engine microbenchmark: scan-body compile time and simulated
-cycles/second of the channel-batched fabric on the paper's 8x4 mesh.
+cycles/second of the channel-batched fabric on the paper's 8x4 mesh, plus
+the vmapped multi-config sweep engine vs a sequential build+run loop.
 
 Pre-refactor baseline (per-channel FabricState list, dict-of-arrays flits,
 same host): compile+first-run 5.5 s, steady state ~1400 cycles/s.
@@ -17,6 +18,7 @@ from repro.core.noc.params import NocParams
 from repro.core.noc.topology import build_mesh
 
 BASELINE_CYC_PER_S = 1400  # seed engine, steady state, 8x4 mesh / 2000 cycles
+SWEEP_SPEEDUP_TARGET = 3.0  # vmapped sweep vs sequential per-config compiles
 
 
 def _measure(params: NocParams, streams: int, n_cycles: int, iters: int):
@@ -37,10 +39,41 @@ def _measure(params: NocParams, streams: int, n_cycles: int, iters: int):
     return compile_s, n_cycles / steady
 
 
-def bench(full: bool = False) -> list[dict]:
+def _sweep_speedup(n_configs: int, n_cycles: int):
+    """Wall-clock of N pattern x size configs: sequential per-config Sims
+    (one compile each) vs one vmapped run_sweep (compiles once)."""
+    topo = build_mesh(nx=4, ny=4)
+    params = NocParams()
+    pats = ["uniform", "shuffle", "bit-complement", "transpose", "neighbor",
+            "tiled-matmul"]
+    wls = [T.dma_workload(topo, p, transfer_kb=kb, n_txns=4)
+           for p in pats for kb in (1, 2)][:n_configs]
+    t0 = time.perf_counter()
+    for wl in wls:
+        sim = S.build_sim(topo, params, wl)
+        jax.block_until_ready(S.run(sim, n_cycles).cycle)
+    t_seq = time.perf_counter() - t0
+    sim0 = S.build_sim(topo, params, wls[0])
+    t0 = time.perf_counter()
+    sts = S.run_sweep(sim0, wls, n_cycles)
+    jax.block_until_ready(sts[0].cycle)
+    t_sweep = time.perf_counter() - t0
+    return t_seq, t_sweep, len(wls)
+
+
+def bench(full: bool = False, smoke: bool = False) -> list[dict]:
     n_cycles = 4000 if full else 2000
     iters = 3 if full else 2
     rows = []
+    if smoke:
+        # toy scale: exercise every path (compile, run, sweep) cheaply
+        t_seq, t_sweep, n = _sweep_speedup(n_configs=3, n_cycles=100)
+        rows.append(row(f"sim_throughput/sweep{n}_smoke_speedup_x",
+                        t_sweep * 1e6, round(t_seq / t_sweep, 2)))
+        compile_s, cps = _measure(NocParams(), streams=1, n_cycles=100, iters=1)
+        rows.append(row("sim_throughput/8x4_smoke/compile_s", compile_s * 1e6,
+                        round(compile_s, 2)))
+        return rows
     compile_s, cps = _measure(NocParams(), streams=1, n_cycles=n_cycles, iters=iters)
     rows.append(row("sim_throughput/8x4/compile_s", compile_s * 1e6,
                     round(compile_s, 2)))
@@ -53,4 +86,14 @@ def bench(full: bool = False) -> list[dict]:
     rows.append(row("sim_throughput/8x4_c4/compile_s", c4 * 1e6, round(c4, 2),
                     target=round(3 * max(compile_s, 0.1), 2), cmp="le"))
     rows.append(row("sim_throughput/8x4_c4/cycles_per_s", 0.0, round(cps4)))
+    # vmapped multi-config sweep: N configs through one jit-compiled scan
+    # body vs the sequential loop's N per-Sim compiles
+    t_seq, t_sweep, n = _sweep_speedup(n_configs=12, n_cycles=600)
+    rows.append(row(f"sim_throughput/sweep{n}_sequential_s", t_seq * 1e6,
+                    round(t_seq, 2)))
+    rows.append(row(f"sim_throughput/sweep{n}_vmapped_s", t_sweep * 1e6,
+                    round(t_sweep, 2)))
+    rows.append(row(f"sim_throughput/sweep{n}_speedup_x", 0.0,
+                    round(t_seq / t_sweep, 2), target=SWEEP_SPEEDUP_TARGET,
+                    cmp="ge"))
     return rows

@@ -1,14 +1,18 @@
 """Explore the cycle-accurate FlooNoC simulator: traffic patterns, ordering
-schemes, the FlooNoC-vs-Occamy comparison (paper Figs. 8, 10, 11), and
-physical-channel-count sweeps (PATRONoC-style parallel wide channels).
+schemes, the FlooNoC-vs-Occamy comparison (paper Figs. 8, 10, 11),
+physical-channel-count sweeps (PATRONoC-style parallel wide channels),
+collectives on the fabric, and the vmapped multi-config sweep engine.
 
 Run:  PYTHONPATH=src python examples/noc_explore.py [--pattern uniform]
       PYTHONPATH=src python examples/noc_explore.py --channels 3 4 5
+      PYTHONPATH=src python examples/noc_explore.py --collectives
+      PYTHONPATH=src python examples/noc_explore.py --sweep
 """
 import argparse
 
 import numpy as np
 
+from repro.core.noc import collective_traffic as CT
 from repro.core.noc import sim as S
 from repro.core.noc import traffic as T
 from repro.core.noc.params import NocParams
@@ -16,17 +20,79 @@ from repro.core.noc.topology import build_mesh, build_occamy
 
 
 def pattern_sweep(pattern: str):
+    """Utilization vs transfer size — all sizes batched through ONE
+    jit-compiled vmapped scan (run_sweep) instead of one compile per size."""
     topo = build_mesh(nx=4, ny=8)
     print(f"== {pattern}: wide-link utilization vs transfer size ==")
-    for kb in (1, 4, 16, 32):
-        wl = T.dma_workload(topo, pattern, transfer_kb=kb, n_txns=4)
-        sim = S.build_sim(topo, NocParams(), wl)
-        out = S.stats(sim, S.run(sim, 3000 + 1200 * kb))
-        nt = topo.meta["n_tiles"]
+    sizes = (1, 4, 16, 32)
+    wls = [T.dma_workload(topo, pattern, transfer_kb=kb, n_txns=4)
+           for kb in sizes]
+    sim = S.build_sim(topo, NocParams(), wls[0])
+    sts = S.run_sweep(sim, wls, 3000 + 1200 * max(sizes))
+    nt = topo.meta["n_tiles"]
+    for kb, st in zip(sizes, sts):
+        out = S.stats(sim, st)
         beats = out["beats_rcvd"][:nt].astype(float)
         util = (beats / np.maximum(out["last_rx"][:nt], 1)).mean()
         done = out["dma_done"][:nt].sum()
         print(f"  {kb:3d} kB: util={util:5.1%}  transfers done={done}/{nt*4}")
+
+
+def collectives_demo(nx: int = 4, ny: int = 4):
+    """Collective schedules lowered onto the fabric: measured completion
+    cycle vs the simulator-calibrated analytical model, and the effective
+    collective bandwidth at paper frequency."""
+    topo = build_mesh(nx=nx, ny=ny)
+    params = NocParams()
+    n = topo.meta["n_tiles"]
+    print(f"== collectives on the {nx}x{ny} mesh (16 kB, wide links) ==")
+    for name, kw in [("all-gather", {}), ("reduce-scatter", {}),
+                     ("all-reduce", {}), ("all-reduce", dict(streams=2)),
+                     ("all-reduce-2d", {}), ("multicast", dict(streams=4)),
+                     ("barrier", {})]:
+        kw = dict(kw)
+        if name not in ("barrier",):
+            kw.setdefault("data_kb", 16)
+        sched = CT.build(topo, name, **kw)
+        sim = S.build_sim(topo, params, CT.to_workload(topo, sched))
+        out = S.stats(sim, S.run(sim, 4000))
+        meas = CT.measured_cycles(out, topo)
+        est = CT.analytical_cycles(sched, params)
+        bw = 16 * 1024 / (meas / params.freq_ghz) if name != "barrier" else 0
+        tag = f"{name} (S={sched.n_streams})"
+        extra = f"  {bw:6.1f} GB/s eff" if bw else " " * 15
+        print(f"  {tag:24s} measured {meas:5d} cyc   model {est:7.1f} cyc "
+              f"({(est - meas) / max(meas, 1):+5.1%}){extra}")
+    print(f"  (ring = {n} tiles, snake order; model terms calibrated from "
+          f"NocParams, see repro.core.collectives.FabricCollectiveModel)")
+
+
+def sweep_demo():
+    """The vmapped sweep engine: N pattern x size configs in one compile."""
+    import time
+
+    import jax
+
+    topo = build_mesh(nx=4, ny=4)
+    params = NocParams()
+    configs = [(p, kb) for p in ("uniform", "shuffle", "bit-complement",
+                                 "transpose", "neighbor", "tiled-matmul")
+               for kb in (1, 4)]
+    wls = [T.dma_workload(topo, p, transfer_kb=kb, n_txns=4)
+           for p, kb in configs]
+    sim = S.build_sim(topo, params, wls[0])
+    t0 = time.perf_counter()
+    sts = S.run_sweep(sim, wls, 2000)
+    jax.block_until_ready(sts[0].cycle)
+    dt = time.perf_counter() - t0
+    nt = topo.meta["n_tiles"]
+    print(f"== vmapped sweep: {len(wls)} configs, one compile, {dt:.1f}s ==")
+    for (p, kb), st in zip(configs, sts):
+        out = S.stats(sim, st)
+        beats = out["beats_rcvd"][:nt].astype(float)
+        util = (beats / np.maximum(out["last_rx"][:nt], 1)).mean()
+        print(f"  {p:15s} {kb:2d} kB: util={util:5.1%}  "
+              f"done={out['dma_done'][:nt].sum()}")
 
 
 def ordering_demo():
@@ -97,9 +163,17 @@ if __name__ == "__main__":
     ap.add_argument("--channels", type=int, nargs="*", default=None,
                     help="sweep physical channel counts (>= 3) instead of "
                          "the default demos")
+    ap.add_argument("--collectives", action="store_true",
+                    help="run the collectives-on-fabric demo")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the vmapped multi-config sweep demo")
     args = ap.parse_args()
     if args.channels:
         channel_sweep(args.channels, args.pattern)
+    elif args.collectives:
+        collectives_demo()
+    elif args.sweep:
+        sweep_demo()
     else:
         pattern_sweep(args.pattern)
         ordering_demo()

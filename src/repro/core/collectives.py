@@ -179,6 +179,90 @@ def multi_stream_sync(grads, cfg: SyncConfig, plan: BucketPlan | None = None,
 
 
 # ----------------------------------------------------------------------
+# Simulator-calibrated collective cycle model
+# ----------------------------------------------------------------------
+# Replaces bare hop-count guesses with link/serialization terms calibrated
+# against the cycle-level fabric (repro.core.noc): every constant below is
+# derived from the simulator's microarchitecture, and
+# tests/test_noc_collectives.py pins the model against measured cycle
+# counts of collective schedules lowered onto that fabric
+# (repro.core.noc.collective_traffic).
+@dataclass(frozen=True)
+class FabricCollectiveModel:
+    """Cycle cost of collective phases on the wide-link fabric.
+
+    A chunk crossing one ring edge costs
+        ``max(streams * beats, beats + hop_cycles * hops + issue_cycles)``:
+    either the edge is *serializer-bound* (the source NI pushes
+    ``streams * beats`` wide beats through its single write serializer per
+    ring step, hiding the hop latency of any one stream) or it is
+    *latency-bound* (the chunk's own ``beats`` serialization plus
+    ``hop_cycles`` per router traversal). ``hops`` counts router
+    traversals (``Topology.hops``: mesh manhattan distance + 1).
+    """
+
+    hop_cycles: float  # per router traversal (in-buf + out-buf stage)
+    issue_cycles: float  # receive-gate satisfied -> first beat injected
+    rt_cycles: float  # extra one-way latency of the B-response round trip
+
+    @classmethod
+    def from_noc_params(cls, params) -> "FabricCollectiveModel":
+        """Derive the terms from NocParams (see noc/engine.py semantics:
+        a flit spends >= 1 cycle in the input and output buffer of every
+        router, so one traversal costs 2 cycles at zero load). The NI issue
+        overhead is zero cycles: the write serializer claims the transfer
+        and emits its first beat in the same cycle the receive-gate is
+        satisfied, and the egress-ready (+1) offset overlaps the first
+        router's input-buffer stage already counted in hop_cycles."""
+        return cls(
+            hop_cycles=2.0,
+            issue_cycles=0.0,
+            rt_cycles=float(params.mem_lat + params.ni_rsp_lat),
+        )
+
+    def edge_cycles(self, beats: int, hops: int, streams: int = 1) -> float:
+        return max(streams * beats,
+                   beats + self.hop_cycles * hops + self.issue_cycles)
+
+    def pipelined_ring_cycles(self, beats: int, paths, streams: int = 1) -> float:
+        """Completion time of a pipelined ring phase.
+
+        ``paths``: [n_chunks, n_steps] router traversals of the edge each
+        chunk crosses at each step. Chunks move concurrently; the phase
+        finishes when the slowest chunk has walked its whole path, paying
+        the per-edge cost at every step plus the ``(streams - 1) * beats``
+        stagger with which the last stream's pipeline drains."""
+        paths = np.asarray(paths)
+        per_edge = np.maximum(
+            streams * beats,
+            beats + self.hop_cycles * paths + self.issue_cycles)
+        per_chunk = per_edge.sum(axis=1) + (streams - 1) * beats
+        return float(per_chunk.max())
+
+    def serial_unicast_cycles(self, beats: int, hop_lists) -> float:
+        """Software multicast: one root pushes a chunk to each destination,
+        destinations split over the per-stream ``hop_lists``.
+
+        Two regimes, the slower wins: (a) RoB-less round-trip bound — a
+        stream must wait for each write's B-response before retargeting its
+        TxnID to a new destination, so its sends serialize over full round
+        trips; (b) serializer bound — all streams share the root's single
+        write serializer, which emits ``beats`` (+1 reclaim cycle) per send
+        back-to-back once enough streams exist to always have one eligible."""
+        chains = [
+            sum(beats + 2 * self.hop_cycles * h + self.issue_cycles
+                + self.rt_cycles for h in hops)
+            for hops in hop_lists if hops
+        ]
+        all_h = [h for hops in hop_lists for h in hops]
+        if not all_h:
+            return 0.0
+        serializer = len(all_h) * (beats + 1) \
+            + 2 * self.hop_cycles * max(all_h) + self.rt_cycles
+        return float(max(max(chains), serializer))
+
+
+# ----------------------------------------------------------------------
 # Narrow channel: latency-critical scalars (loss, grad-norm, router stats)
 # ----------------------------------------------------------------------
 def narrow_sync(scalars: dict, axes: tuple[str, ...]) -> dict:

@@ -1,0 +1,355 @@
+"""Collective schedules lowered onto the cycle-level fabric.
+
+The follow-on FlooNoC work (Colagrande et al.) carries ML collectives on the
+same wide physical links the paper built for bulk DMA. This module compiles
+all-gather / reduce-scatter / all-reduce (1-D ring and 2-D dimension-ordered
+ring), software multicast and barrier into multi-stream DMA ``Workload``
+programmes: each ring step becomes one wide write burst whose issue is gated
+on the *receipt* of the previous step's chunk (``Workload.dma_dst_seq`` /
+``dma_gate`` / ``dma_beats_seq``, see endpoints.py), so the simulator
+reproduces the real pipeline skew, serialization and wormhole behaviour of a
+collective instead of an open-loop traffic pattern.
+
+Streams split the data: with S streams every tile runs S independent ring
+pipelines under distinct TxnIDs (the paper's multi-stream DMA), which both
+parallelizes the collective and — for multicast — removes the RoB-less NI's
+destination-change round-trip serialization.
+
+Gate semantics: a gate is a receive-*count* threshold per (endpoint,
+stream), not a per-source dependence edge — the NI counts complete write
+bursts without inspecting the sender. That is exact for the schedules
+built here because they are source-symmetric: in a 1-D ring each tile has
+a single predecessor, and in the 2-D schedule a column burst can only be
+*sent* after its sender finished the row phase, so on the deterministic
+fabric counts and true dependencies coincide
+(tests/test_noc_collectives.py asserts the dimension order held in the
+delivered trace). Hand-built schedules whose steps mix sources
+asymmetrically may satisfy a gate with the "wrong" burst under heavy
+cross-traffic skew.
+
+Cross-validation: every schedule carries the per-chunk edge-hop paths that
+``repro.core.collectives.FabricCollectiveModel`` (simulator-calibrated
+link/serialization terms) prices; ``analytical_cycles`` must match the
+measured completion cycle within ~15% (tests/test_noc_collectives.py).
+
+Collectives run as RoB-less writes; ``rob`` ordering works but its credit
+accounting uses the scalar ``dma_beats`` approximation for variable-size
+schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.collectives import FabricCollectiveModel
+from repro.core.noc.endpoints import Workload, idle_workload
+from repro.core.noc.params import NocParams
+from repro.core.noc.topology import Topology
+
+COLLECTIVES = ["all-gather", "reduce-scatter", "all-reduce", "all-reduce-2d",
+               "multicast", "barrier"]
+
+
+@dataclass(frozen=True)
+class Phase:
+    """Analytical metadata of one pipelined ring phase: chunk size and the
+    router-traversal count of the edge each chunk crosses at each step
+    (``paths[c, t]``)."""
+
+    beats: int
+    paths: np.ndarray  # [n_chunks, n_steps] int
+
+
+@dataclass(frozen=True)
+class CollectiveSchedule:
+    """Per-(endpoint, stream, step) transfer programme + analytical model.
+
+    ``dst_seq[e, s, k]`` is the destination of step k (-1 = no transfer),
+    issued only once stream s at endpoint e has received ``gate[e, s, k]``
+    complete write bursts; ``beats_seq`` gives the burst length. ``txns``
+    is the number of scheduled transfers per (endpoint, stream) and
+    ``expect_rx`` the bursts each (endpoint, stream) must end up receiving
+    (exactly-once delivery check).
+    """
+
+    name: str
+    dst_seq: np.ndarray  # [E, S, K] int32
+    gate: np.ndarray  # [E, S, K] int32
+    beats_seq: np.ndarray  # [E, S, K] int32
+    txns: np.ndarray  # [E, S] int32
+    expect_rx: np.ndarray  # [E, S] int32
+    phases: tuple  # tuple[Phase] (empty for serial-unicast schedules)
+    model: str = "pipelined-ring"  # | "serial-unicast"
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_streams(self) -> int:
+        return self.dst_seq.shape[1]
+
+    @property
+    def n_steps(self) -> int:
+        return self.dst_seq.shape[2]
+
+
+# ----------------------------------------------------------------------
+# ring embeddings
+# ----------------------------------------------------------------------
+def snake_order(topo: Topology) -> np.ndarray:
+    """Boustrophedon tile order: consecutive ring neighbours are mesh
+    neighbours everywhere except the single wrap-around edge."""
+    nx, ny = topo.meta["nx"], topo.meta["ny"]
+    order = []
+    for y in range(ny):
+        xs = range(nx) if y % 2 == 0 else range(nx - 1, -1, -1)
+        order.extend(y * nx + x for x in xs)
+    return np.asarray(order, np.int32)
+
+
+def _ring_hops(topo: Topology, order: np.ndarray) -> np.ndarray:
+    """Router traversals of each directed ring edge order[i] -> order[i+1]."""
+    coord = topo.tile_coord
+    nxt = np.roll(order, -1)
+    d = np.abs(coord[order] - coord[nxt]).sum(axis=1)
+    return (d + 1).astype(np.int32)  # manhattan + 1 = routers visited
+
+
+def _chunk_paths(edge_hops: np.ndarray, n_steps: int) -> np.ndarray:
+    """paths[c, t] = hops of the edge chunk c crosses at step t: the chunk
+    born at ring position c walks edges c, c+1, ... around the ring."""
+    n = len(edge_hops)
+    c = np.arange(n)[:, None]
+    t = np.arange(n_steps)[None, :]
+    return edge_hops[(c + t) % n]
+
+
+def _empty(E: int, S: int, K: int):
+    return (np.full((E, S, K), -1, np.int32), np.zeros((E, S, K), np.int32),
+            np.zeros((E, S, K), np.int32))
+
+
+def _beats_of(data_kb: float, parts: int) -> int:
+    """Wide beats (64 B) per chunk when data_kb is split into `parts`."""
+    return max(int(np.ceil(data_kb * 1024 / 64 / parts)), 1)
+
+
+# ----------------------------------------------------------------------
+# schedule builders
+# ----------------------------------------------------------------------
+def _ring_schedule(topo: Topology, name: str, laps_steps: int, beats: int,
+                   streams: int, order: np.ndarray | None) -> CollectiveSchedule:
+    """Common body of the 1-D ring collectives: every tile sends `beats` to
+    its ring successor at each of `laps_steps` steps, step k gated on k
+    received bursts (the chunk forwarded at step k is the one received at
+    step k-1)."""
+    E = topo.n_endpoints
+    order = snake_order(topo) if order is None else np.asarray(order, np.int32)
+    n = len(order)
+    succ = np.empty((n,), np.int32)
+    succ[order] = np.roll(order, -1)  # succ[tile] = next tile on the ring
+    dst, gate, bts = _empty(E, streams, laps_steps)
+    k = np.arange(laps_steps, dtype=np.int32)
+    for tile in order:
+        dst[tile, :, :] = succ[tile]
+        gate[tile, :, :] = k[None, :]
+        bts[tile, :, :] = beats
+    txns = np.zeros((E, streams), np.int32)
+    txns[order] = laps_steps
+    expect = np.zeros((E, streams), np.int32)
+    expect[order] = laps_steps  # ring: one burst in per burst out
+    hops = _ring_hops(topo, order)
+    phase = Phase(beats=beats, paths=_chunk_paths(hops, laps_steps))
+    return CollectiveSchedule(
+        name=name, dst_seq=dst, gate=gate, beats_seq=bts, txns=txns,
+        expect_rx=expect, phases=(phase,),
+        meta={"order": order, "edge_hops": hops},
+    )
+
+
+def all_gather(topo: Topology, *, data_kb: float = 16, streams: int = 1,
+               order: np.ndarray | None = None) -> CollectiveSchedule:
+    """Ring all-gather: N-1 steps, each moving one node's chunk onward."""
+    n = topo.meta["n_tiles"]
+    beats = _beats_of(data_kb, n * streams)
+    return _ring_schedule(topo, "all-gather", n - 1, beats, streams, order)
+
+
+def reduce_scatter(topo: Topology, *, data_kb: float = 16, streams: int = 1,
+                   order: np.ndarray | None = None) -> CollectiveSchedule:
+    """Ring reduce-scatter: same wire pattern as all-gather (the reduction
+    itself is local compute, modeled as free against the wide transfers)."""
+    n = topo.meta["n_tiles"]
+    beats = _beats_of(data_kb, n * streams)
+    return _ring_schedule(topo, "reduce-scatter", n - 1, beats, streams, order)
+
+
+def all_reduce(topo: Topology, *, data_kb: float = 16, streams: int = 1,
+               order: np.ndarray | None = None) -> CollectiveSchedule:
+    """Ring all-reduce = reduce-scatter + all-gather: 2(N-1) steps of
+    data/N-sized chunks."""
+    n = topo.meta["n_tiles"]
+    beats = _beats_of(data_kb, n * streams)
+    return _ring_schedule(topo, "all-reduce", 2 * (n - 1), beats, streams, order)
+
+
+def all_reduce_2d(topo: Topology, *, data_kb: float = 16,
+                  streams: int = 1) -> CollectiveSchedule:
+    """Dimension-ordered 2-D all-reduce (XY-routing analogue): a ring
+    all-reduce along each row, then one along each column; column steps are
+    gated on the full row phase having arrived at that tile."""
+    E = topo.n_endpoints
+    nx, ny = topo.meta["nx"], topo.meta["ny"]
+    nt = topo.meta["n_tiles"]
+    coord = topo.tile_coord
+    k_row, k_col = 2 * (nx - 1), 2 * (ny - 1)
+    b_row = _beats_of(data_kb, nx * streams)
+    b_col = _beats_of(data_kb, ny * streams)
+    K = k_row + k_col
+    dst, gate, bts = _empty(E, streams, K)
+    for e in range(nt):
+        x, y = coord[e]
+        row_succ = y * nx + (x + 1) % nx
+        col_succ = ((y + 1) % ny) * nx + x
+        dst[e, :, :k_row] = row_succ
+        gate[e, :, :k_row] = np.arange(k_row)[None, :]
+        bts[e, :, :k_row] = b_row
+        dst[e, :, k_row:] = col_succ
+        gate[e, :, k_row:] = k_row + np.arange(k_col)[None, :]
+        bts[e, :, k_row:] = b_col
+    txns = np.zeros((E, streams), np.int32)
+    txns[:nt] = K
+    expect = np.zeros((E, streams), np.int32)
+    expect[:nt] = K
+    # phase hop structure: row rings wrap across nx-1 routers, column rings
+    # across ny-1 (all row rings are congruent, so one path set suffices)
+    row_hops = np.full((nx,), 2, np.int32)
+    row_hops[nx - 1] = nx  # wrap edge: manhattan nx-1, +1 router
+    col_hops = np.full((ny,), 2, np.int32)
+    col_hops[ny - 1] = ny
+    phases = (Phase(beats=b_row, paths=_chunk_paths(row_hops, k_row)),
+              Phase(beats=b_col, paths=_chunk_paths(col_hops, k_col)))
+    return CollectiveSchedule(
+        name="all-reduce-2d", dst_seq=dst, gate=gate, beats_seq=bts,
+        txns=txns, expect_rx=expect, phases=phases,
+        meta={"k_row": k_row, "k_col": k_col},
+    )
+
+
+def multicast(topo: Topology, root: int = 0, *, data_kb: float = 4,
+              streams: int = 1) -> CollectiveSchedule:
+    """Software multicast: the root unicasts one chunk to every other tile,
+    destinations round-robined over the DMA streams. With one stream the
+    RoB-less NI serializes full round trips (TxnID retargeting); multiple
+    streams pipeline — the paper's multi-stream argument at collective
+    level."""
+    E = topo.n_endpoints
+    nt = topo.meta["n_tiles"]
+    beats = _beats_of(data_kb, 1)
+    dsts = [t for t in range(nt) if t != root]
+    K = int(np.ceil(len(dsts) / streams))
+    dst, gate, bts = _empty(E, streams, max(K, 1))
+    txns = np.zeros((E, streams), np.int32)
+    expect = np.zeros((E, streams), np.int32)
+    hop_lists = []
+    for s in range(streams):
+        mine = dsts[s::streams]
+        hop_lists.append([topo.hops(root, d) for d in mine])
+        for k, d in enumerate(mine):
+            dst[root, s, k] = d
+            bts[root, s, k] = beats
+            expect[d, s] = 1
+        txns[root, s] = len(mine)
+    return CollectiveSchedule(
+        name="multicast", dst_seq=dst, gate=gate, beats_seq=bts, txns=txns,
+        expect_rx=expect, phases=(), model="serial-unicast",
+        meta={"root": root, "beats": beats, "hop_lists": hop_lists},
+    )
+
+
+def barrier(topo: Topology, *, streams: int = 1,
+            order: np.ndarray | None = None) -> CollectiveSchedule:
+    """Barrier as a 1-beat ring all-gather: after N-1 gated steps every tile
+    has heard from every other."""
+    n = topo.meta["n_tiles"]
+    sched = _ring_schedule(topo, "barrier", n - 1, 1, streams, order)
+    return sched
+
+
+def build(topo: Topology, name: str, **kw) -> CollectiveSchedule:
+    builders = {"all-gather": all_gather, "reduce-scatter": reduce_scatter,
+                "all-reduce": all_reduce, "all-reduce-2d": all_reduce_2d,
+                "multicast": multicast, "barrier": barrier}
+    return builders[name](topo, **kw)
+
+
+# ----------------------------------------------------------------------
+# lowering + checks + analytics
+# ----------------------------------------------------------------------
+def to_workload(topo: Topology, sched: CollectiveSchedule) -> Workload:
+    """Lower a schedule into a multi-stream DMA write Workload. Stream s
+    rides TxnID s (unique_txn_per_stream), so receive-gates and RoB-less
+    ordering resolve per stream; keep streams <= NocParams.n_txn_ids.
+
+    Runs ``check_schedule`` first: a deadlocking or over/under-delivering
+    schedule is rejected here instead of silently stalling the simulator.
+    """
+    check_schedule(sched)
+    E = topo.n_endpoints
+    wl = idle_workload(E, n_tiles=topo.meta["n_tiles"], streams=sched.n_streams)
+    return dataclasses.replace(
+        wl, dma_txns=sched.txns, dma_write=True,
+        dma_beats=int(sched.beats_seq.max()),
+        dma_dst_seq=sched.dst_seq, dma_gate=sched.gate,
+        dma_beats_seq=sched.beats_seq,
+    )
+
+
+def check_schedule(sched: CollectiveSchedule) -> None:
+    """Deadlock-freedom + exactly-once delivery at schedule level: replay
+    the gates (a transfer fires once its stream has received its gate count)
+    and verify every scheduled transfer eventually fires and every
+    (endpoint, stream) receives exactly expect_rx bursts."""
+    E, S, _ = sched.dst_seq.shape
+    rx = np.zeros((E, S), np.int64)
+    k = np.zeros((E, S), np.int64)
+    fired = 0
+    total = int(sched.txns.sum())
+    while True:
+        progress = False
+        for e in range(E):
+            for s in range(S):
+                while k[e, s] < sched.txns[e, s]:
+                    step = int(k[e, s])
+                    if rx[e, s] < sched.gate[e, s, step]:
+                        break
+                    d = int(sched.dst_seq[e, s, step])
+                    assert d >= 0, f"scheduled step {step} at ({e},{s}) has no dst"
+                    rx[d, s] += 1
+                    k[e, s] += 1
+                    fired += 1
+                    progress = True
+        if not progress:
+            break
+    assert fired == total, f"schedule deadlocks: {fired}/{total} transfers fired"
+    np.testing.assert_array_equal(rx, sched.expect_rx)
+
+
+def analytical_cycles(sched: CollectiveSchedule, params: NocParams) -> float:
+    """Simulator-calibrated completion-cycle estimate for a schedule."""
+    model = FabricCollectiveModel.from_noc_params(params)
+    S = sched.n_streams
+    if sched.model == "serial-unicast":
+        return model.serial_unicast_cycles(sched.meta["beats"],
+                                           sched.meta["hop_lists"])
+    return sum(
+        model.pipelined_ring_cycles(ph.beats, ph.paths, streams=S)
+        for ph in sched.phases
+    )
+
+
+def measured_cycles(stats: dict, topo: Topology) -> int:
+    """Completion cycle of a collective run: the last wide beat received by
+    any participating tile."""
+    nt = topo.meta["n_tiles"]
+    return int(np.asarray(stats["last_rx"])[:nt].max())

@@ -31,7 +31,12 @@ from repro.core.noc.params import NocParams
 
 @dataclass(frozen=True)
 class Workload:
-    """Static per-endpoint traffic programme (numpy, baked into the sim)."""
+    """Static per-endpoint traffic programme (numpy, baked into the sim).
+
+    Array-valued fields may also be jnp arrays with a leading batch axis
+    handled by the caller (see sim.run_sweep), as the step functions only
+    ever jnp.asarray + index them.
+    """
 
     narrow_rate: np.ndarray  # [E] f32 requests/cycle (0 = off)
     narrow_dst: np.ndarray  # [E] int32 (-1 off, -2 uniform-random per msg)
@@ -42,6 +47,16 @@ class Workload:
     dma_write: bool  # False = reads, True = writes
     n_tiles: int
     unique_txn_per_stream: bool = True  # multi-stream DMA (unique TxnIDs)
+    # ---- scheduled (multi-phase) DMA: collective lowering ----
+    # When dma_dst_seq is set, transfer k of stream s at endpoint e goes to
+    # dma_dst_seq[e, s, k] with dma_beats_seq[e, s, k] wide beats, and may
+    # only issue once the endpoint has *received* dma_gate[e, s, k] complete
+    # write bursts on that stream (rx_bursts) — the data dependency of e.g.
+    # a ring step on the previous step's chunk. dma_txns still bounds the
+    # number of transfers per stream (entries past it are padding).
+    dma_dst_seq: np.ndarray | None = None  # [E, S, K] int32
+    dma_gate: np.ndarray | None = None  # [E, S, K] int32 required rx_bursts
+    dma_beats_seq: np.ndarray | None = None  # [E, S, K] int32
 
     @property
     def n_streams(self) -> int:
@@ -75,6 +90,7 @@ class EndpointState:
     d_outst: jnp.ndarray  # [E, C] outstanding transfers
     d_seq: jnp.ndarray  # [E, C] issue index
     d_beats_got: jnp.ndarray  # [E, C] read beats received (stats)
+    rx_bursts: jnp.ndarray  # [E, C] complete write bursts received per stream
     # write burst serializer (one active burst per endpoint)
     w_stream: jnp.ndarray  # [E] active stream (-1)
     w_left: jnp.ndarray  # [E] beats left
@@ -127,7 +143,7 @@ def init_endpoints(E: int, params: NocParams, streams: int) -> EndpointState:
         rob_credit=jnp.full((E,), params.rob_beats, jnp.int32),
         n_acc=jnp.zeros((E,), jnp.float32), n_seq=z(E),
         d_txns_left=z(E, streams), d_outst=z(E, streams), d_seq=z(E, streams),
-        d_beats_got=z(E, streams),
+        d_beats_got=z(E, streams), rx_bursts=z(E, streams),
         w_stream=jnp.full((E,), -1, jnp.int32), w_left=z(E), w_dst=z(E),
         w_txn=z(E), w_ts=z(E),
         t_aww_left=z(E), t_aww_src=z(E), t_aww_txn=z(E),

@@ -103,6 +103,9 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
     mq, mq_cnt = epm._mq_push_multi(mq, mq_cnt, w_tail, flits[..., F_SRC],
                                     flits[..., F_TXN], 1, WIDE_B,
                                     flits[..., F_TS])
+    # completed write bursts per stream: the data-dependency signal the
+    # scheduled (collective) DMA gates on
+    rx_bursts = st.rx_bursts.at[eb, stream].add(w_tail.astype(jnp.int32))
 
     # ---- rsp channel ----
     f = flits[CH_RSP]
@@ -123,9 +126,10 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
 
     return dataclasses.replace(
         st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob, mq=mq, mq_cnt=mq_cnt,
-        d_beats_got=d_beats_got, beats_rcvd=beats_rcvd, d_outst=d_outst,
-        d_done=d_done, lat_sum=lat_sum, lat_cnt=lat_cnt, last_rx=last_rx,
-        first_rx=first_rx, eg=eg, eg_ready=eg_ready, eg_cnt=eg_cnt,
+        d_beats_got=d_beats_got, rx_bursts=rx_bursts, beats_rcvd=beats_rcvd,
+        d_outst=d_outst, d_done=d_done, lat_sum=lat_sum, lat_cnt=lat_cnt,
+        last_rx=last_rx, first_rx=first_rx, eg=eg, eg_ready=eg_ready,
+        eg_cnt=eg_cnt,
     )
 
 
@@ -178,18 +182,32 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
         else jnp.zeros((1, S), jnp.int32)
     )
     txn_of_stream = jnp.broadcast_to(txn_of_stream, (E, S))
-    # per-(e, s) desired destination for the *next* transfer
-    odd = (st.d_seq % 2) == 1
-    dst_es = jnp.where((dma_alt_t >= 0) & odd, dma_alt_t, dma_dst_t)
-    dst_es = jnp.where(
-        dma_dst_t == -2,
-        _uniform_dst(eidx[:, None], st.d_seq * S + jnp.arange(S)[None, :], cycle, n_tiles),
-        dst_es,
-    ).astype(jnp.int32)
-    beats = jnp.full((E, S), wl.dma_beats, jnp.int32)
+    if wl.dma_dst_seq is not None:
+        # scheduled multi-phase DMA (collective lowering): destination,
+        # beats and receive-gate are looked up per issue index; a transfer
+        # only becomes eligible once the stream has received its gate count
+        # of complete write bursts (ring-step data dependency)
+        k = jnp.clip(st.d_seq, 0, wl.dma_dst_seq.shape[-1] - 1)[:, :, None]
+        at_k = lambda a: jnp.take_along_axis(jnp.asarray(a), k, axis=2)[..., 0]
+        dst_es = at_k(wl.dma_dst_seq).astype(jnp.int32)
+        beats = at_k(wl.dma_beats_seq)
+        gate_ok = st.rx_bursts >= at_k(wl.dma_gate)
+        enabled = dst_es != -1
+    else:
+        # per-(e, s) desired destination for the *next* transfer
+        odd = (st.d_seq % 2) == 1
+        dst_es = jnp.where((dma_alt_t >= 0) & odd, dma_alt_t, dma_dst_t)
+        dst_es = jnp.where(
+            dma_dst_t == -2,
+            _uniform_dst(eidx[:, None], st.d_seq * S + jnp.arange(S)[None, :], cycle, n_tiles),
+            dst_es,
+        ).astype(jnp.int32)
+        beats = jnp.full((E, S), wl.dma_beats, jnp.int32)
+        gate_ok = jnp.ones((E, S), bool)
+        enabled = dma_dst_t != -1
     st_tmp = dataclasses.replace(st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob)
     ok_es = epm._ni_check(st_tmp, txn_of_stream, dst_es, params, beats)
-    want_es = (st.d_txns_left > 0) & (st.d_outst < params.max_outstanding) & (dma_dst_t != -1)
+    want_es = (st.d_txns_left > 0) & (st.d_outst < params.max_outstanding) & enabled & gate_ok
     elig = want_es & ok_es
     # rotating pick
     rot = (jnp.arange(S)[None, :] - (cycle + eidx[:, None])) % S
@@ -322,16 +340,19 @@ class Sim:
     is_mem: jnp.ndarray
     _jit_cache: dict = field(default_factory=dict, repr=False, compare=False)
 
-    def init_state(self) -> SimState:
+    def init_state(self, wl: epm.Workload | None = None) -> SimState:
+        wl = self.wl if wl is None else wl
         fabric = eng.init_fabric(self.topo, self.params.depth_in,
                                  self.params.depth_out, self.params.n_channels)
-        eps = epm.init_endpoints(self.topo.n_endpoints, self.params, self.wl.n_streams)
-        eps = dataclasses.replace(eps, d_txns_left=jnp.asarray(self.wl.dma_txns))
+        eps = epm.init_endpoints(self.topo.n_endpoints, self.params, wl.n_streams)
+        eps = dataclasses.replace(eps, d_txns_left=jnp.asarray(wl.dma_txns))
         return SimState(fabric=fabric, eps=eps, cycle=jnp.zeros((), jnp.int32))
 
-    def step(self, st: SimState):
+    def step(self, st: SimState, wl: epm.Workload | None = None):
         """One simulated cycle. Returns (state', (ep_flit [C, E, NF],
-        ep_valid [C, E])) — the per-channel endpoint deliveries."""
+        ep_valid [C, E])) — the per-channel endpoint deliveries. ``wl``
+        overrides the baked-in workload (sweep engine: traced arrays)."""
+        wl = self.wl if wl is None else wl
         cycle = st.cycle
         E = self.topo.n_endpoints
         # 1) fabric cycle, all channels at once (endpoints always have ingest
@@ -339,8 +360,8 @@ class Sim:
         space = jnp.ones((E,), bool)
         fabric, ep_flit, ep_valid = eng.fabric_cycle(st.fabric, self.tables, space)
         # 2) endpoint processing
-        eps = _ingest(st.eps, ep_flit, ep_valid, cycle, self.params, self.wl)
-        eps = _generators(eps, cycle, self.params, self.wl, self.wl.n_tiles)
+        eps = _ingest(st.eps, ep_flit, ep_valid, cycle, self.params, wl)
+        eps = _generators(eps, cycle, self.params, wl, wl.n_tiles)
         eps = _memory(eps, cycle, self.params, self.is_hbm, self.is_mem)
         # 3) egress -> injection: every channel's head whose ready time came
         head = eps.eg[:, :, 0, :]  # [C, E, NF]
@@ -362,6 +383,28 @@ class Sim:
                     return s2, (deliver if with_trace else None)
 
                 return jax.lax.scan(body, st, None, length=n_cycles)
+
+            self._jit_cache[key] = fn
+        return fn
+
+    def _sweep_fn(self, n_cycles: int, fields: tuple):
+        """One jitted vmapped scan over N workload configs at once: the
+        workload arrays become traced inputs instead of baked-in constants,
+        so the whole sweep compiles exactly once."""
+        key = ("sweep", n_cycles, fields)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            @jax.jit
+            def fn(batch):
+                def one(values):
+                    wl = dataclasses.replace(self.wl, **dict(zip(fields, values)))
+                    def body(s, _):
+                        s2, _ = self.step(s, wl)
+                        return s2, None
+                    s, _ = jax.lax.scan(body, self.init_state(wl), None,
+                                        length=n_cycles)
+                    return s
+                return jax.vmap(one)(batch)
 
             self._jit_cache[key] = fn
         return fn
@@ -393,6 +436,42 @@ def run_trace(sim: Sim, n_cycles: int, state: SimState | None = None):
     return sim._scan_fn(n_cycles, with_trace=True)(st)
 
 
+# workload fields that may vary across a sweep batch (they become traced
+# inputs); everything else (dma_write, unique_txn_per_stream, n_tiles,
+# stream count, schedule presence/length) is compile-time static and must
+# match across the batch.
+SWEEP_FIELDS = ("narrow_rate", "narrow_dst", "dma_dst", "dma_alt_dst",
+                "dma_txns", "dma_beats", "dma_dst_seq", "dma_gate",
+                "dma_beats_seq")
+
+
+def run_sweep(sim: Sim, wls: list[epm.Workload], n_cycles: int) -> list[SimState]:
+    """Run N workload configurations through ONE jit-compiled vmapped scan.
+
+    All workloads must share ``sim.topo`` / ``sim.params`` and every static
+    workload attribute (read/write mode, stream count, n_tiles, schedule
+    shape); the array-valued fields are batched into traced inputs, so the
+    scan body compiles exactly once for the whole sweep instead of once per
+    configuration (each ``build_sim`` + ``run`` bakes its workload in as
+    constants and recompiles). Returns one final SimState per workload.
+    """
+    ref = sim.wl
+    for w in wls:
+        if (w.dma_write != ref.dma_write
+                or w.unique_txn_per_stream != ref.unique_txn_per_stream
+                or w.n_tiles != ref.n_tiles or w.n_streams != ref.n_streams):
+            raise ValueError("sweep workloads must share static workload attributes")
+        for f in ("dma_dst_seq", "dma_gate", "dma_beats_seq"):
+            if (getattr(w, f) is None) != (getattr(ref, f) is None):
+                raise ValueError(f"sweep workloads must agree on {f} presence")
+    fields = tuple(f for f in SWEEP_FIELDS if getattr(ref, f) is not None)
+    batch = tuple(
+        jnp.stack([jnp.asarray(getattr(w, f)) for w in wls]) for f in fields
+    )
+    final = sim._sweep_fn(n_cycles, fields)(batch)
+    return [jax.tree.map(lambda x, i=i: x[i], final) for i in range(len(wls))]
+
+
 def stats(sim: Sim, st: SimState) -> dict:
     eps = st.eps
     cyc = int(st.cycle)
@@ -407,6 +486,7 @@ def stats(sim: Sim, st: SimState) -> dict:
         "hbm_served": np.asarray(eps.hbm_served),
         "ni_stalls": np.asarray(eps.ni_stall),
         "dma_done": np.asarray(eps.d_done),
+        "rx_bursts": np.asarray(eps.rx_bursts),
         "last_rx": np.asarray(eps.last_rx),
         "first_rx": np.asarray(eps.first_rx),
         "mq_max": int(np.asarray(eps.mq_cnt).max()),

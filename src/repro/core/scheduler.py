@@ -10,9 +10,14 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from repro.core.collectives import FabricCollectiveModel
+from repro.core.noc.params import NocParams
+
 ICI_BW = 50e9  # B/s per on-pod link (TPU v5e-class)
 C2C_BW = 12.5e9  # B/s pod-boundary (DCI per chip, scarce like the paper's C2C)
-HOP_LAT = 2  # cycles per router hop (paper Fig. 7)
+# cycles per router traversal, from the simulator-calibrated collective model
+# (matches paper Fig. 7's 2-cycles-per-hop routers)
+HOP_LAT = FabricCollectiveModel.from_noc_params(NocParams()).hop_cycles
 FREQ = 1.26e9
 MSG_OVERHEAD_S = 5e-6  # per-collective injection/firmware overhead
 COMPRESS_RATIO = 0.25  # int8 vs f32
