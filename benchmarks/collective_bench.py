@@ -14,15 +14,14 @@ from repro.core import scheduler as sched
 from repro.core.noc import collective_traffic as CT
 from repro.core.noc import sim as S
 from repro.core.noc.params import NocParams
-from repro.core.noc.topology import build_mesh
+from repro.core.noc.topology import build_mesh, build_multi_die, build_torus
 
 
-def _fabric_collectives(nx: int, ny: int, n_cycles: int, configs) -> list[dict]:
+def _fabric_collectives(topo, n_cycles: int, configs) -> list[dict]:
     """Run collective schedules on the cycle-level fabric and report
     measured completion cycles against the calibrated analytical model.
     Shape-compatible schedules (same stream count and step count) batch
     through ONE vmapped sweep; the rest run singly."""
-    topo = build_mesh(nx=nx, ny=ny)
     params = NocParams()
     rows = []
     groups: dict[tuple, list] = {}
@@ -38,31 +37,47 @@ def _fabric_collectives(nx: int, ny: int, n_cycles: int, configs) -> list[dict]:
         for (name, kw, sc), st in zip(members, sts):
             out = S.stats(sim, st)
             meas = CT.measured_cycles(out, topo)
-            est = CT.analytical_cycles(sc, params)
+            est = CT.analytical_cycles(sc, params, topo)
             delivered = bool(np.array_equal(out["rx_bursts"], sc.expect_rx))
             tag = f"{name}_s{streams}"
-            rows.append(row(f"coll/fabric/{nx}x{ny}/{tag}_cycles", 0.0, meas,
+            rows.append(row(f"coll/fabric/{topo.name}/{tag}_cycles", 0.0, meas,
                             target=round(est, 1), rel_tol=0.15))
-            rows.append(row(f"coll/fabric/{nx}x{ny}/{tag}_delivered", 0.0,
+            rows.append(row(f"coll/fabric/{topo.name}/{tag}_delivered", 0.0,
                             int(delivered), target=1, rel_tol=0.01))
     return rows
 
 
 def bench(full: bool = False, smoke: bool = False) -> list[dict]:
     if smoke:
-        return _fabric_collectives(
-            nx=2, ny=2, n_cycles=300,
+        # topology axis at toy scale: mesh + one torus + one multi-die
+        rows = _fabric_collectives(
+            build_mesh(nx=2, ny=2), n_cycles=300,
             configs=[("all-reduce", dict(data_kb=1)),
                      ("all-gather", dict(data_kb=1))])
+        rows += _fabric_collectives(
+            build_torus(nx=2, ny=2), n_cycles=300,
+            configs=[("all-reduce", dict(data_kb=1))])
+        rows += _fabric_collectives(
+            build_multi_die(n_dies=2, nx=2, ny=2, d2d=2), n_cycles=600,
+            configs=[("all-gather", dict(data_kb=1))])
+        return rows
     rows = []
     # ---- collectives on the cycle-level fabric vs calibrated model ----
     kb = dict(data_kb=16)
     rows += _fabric_collectives(
-        nx=4, ny=4, n_cycles=2600,
+        build_mesh(nx=4, ny=4), n_cycles=2600,
         configs=[("all-gather", kb), ("reduce-scatter", kb), ("barrier", {}),
                  ("multicast", dict(data_kb=4)), ("all-reduce", kb),
                  ("all-reduce", dict(data_kb=16, streams=2)),
                  ("all-reduce-2d", kb)])
+    # the topology zoo: torus rings pay no wrap turnaround, multi-die rings
+    # cross the die-to-die repeater chains, Occamy rings thread the Xbars
+    rows += _fabric_collectives(
+        build_torus(nx=4, ny=4), n_cycles=2600,
+        configs=[("all-gather", kb), ("all-reduce", kb), ("all-reduce-2d", kb)])
+    rows += _fabric_collectives(
+        build_multi_die(n_dies=2, nx=2, ny=4, d2d=3), n_cycles=3000,
+        configs=[("all-gather", kb), ("all-reduce", kb)])
     # multi-stream multicast: independent TxnIDs remove the RoB-less NI's
     # destination-change round-trip serialization (paper Sec. III/IV at
     # collective level)

@@ -15,14 +15,26 @@ from benchmarks.common import row
 from repro.core.noc import sim as S
 from repro.core.noc import traffic as T
 from repro.core.noc.params import NocParams
-from repro.core.noc.topology import build_mesh
+from repro.core.noc.topology import Topology, build_mesh, build_multi_die, build_torus
 
 BASELINE_CYC_PER_S = 1400  # seed engine, steady state, 8x4 mesh / 2000 cycles
 SWEEP_SPEEDUP_TARGET = 3.0  # vmapped sweep vs sequential per-config compiles
 
+# the --topology axis: every shape the engine must keep simulating (smoke
+# runs one torus and one multi-die config; --full also times them)
+SMOKE_TOPOLOGIES = [
+    ("torus", lambda: build_torus(nx=4, ny=2)),
+    ("multi_die", lambda: build_multi_die(n_dies=2, nx=2, ny=2, d2d=2)),
+]
+FULL_TOPOLOGIES = [
+    ("torus", lambda: build_torus(nx=4, ny=8)),
+    ("multi_die", lambda: build_multi_die(n_dies=2, nx=2, ny=8, d2d=3)),
+]
 
-def _measure(params: NocParams, streams: int, n_cycles: int, iters: int):
-    topo = build_mesh(nx=4, ny=8)
+
+def _measure(params: NocParams, streams: int, n_cycles: int, iters: int,
+             topo: Topology | None = None):
+    topo = build_mesh(nx=4, ny=8) if topo is None else topo
     wl = T.dma_workload(topo, "uniform", transfer_kb=8, n_txns=4, streams=streams)
     sim = S.build_sim(topo, params, wl)
     st0 = sim.init_state()
@@ -73,6 +85,16 @@ def bench(full: bool = False, smoke: bool = False) -> list[dict]:
         compile_s, cps = _measure(NocParams(), streams=1, n_cycles=100, iters=1)
         rows.append(row("sim_throughput/8x4_smoke/compile_s", compile_s * 1e6,
                         round(compile_s, 2)))
+        # topology axis: one torus and one multi-die config must stay green
+        for tname, mk in SMOKE_TOPOLOGIES:
+            topo = mk()
+            wl = T.dma_workload(topo, "uniform", transfer_kb=1, n_txns=2)
+            sim = S.build_sim(topo, NocParams(), wl)
+            out = S.stats(sim, S.run(sim, 300))
+            nt = topo.meta["n_tiles"]
+            rows.append(row(f"sim_throughput/{tname}_smoke/dma_done", 0.0,
+                            int(out["dma_done"][:nt].sum()), target=nt * 2,
+                            rel_tol=0.01))
         return rows
     compile_s, cps = _measure(NocParams(), streams=1, n_cycles=n_cycles, iters=iters)
     rows.append(row("sim_throughput/8x4/compile_s", compile_s * 1e6,
@@ -86,6 +108,13 @@ def bench(full: bool = False, smoke: bool = False) -> list[dict]:
     rows.append(row("sim_throughput/8x4_c4/compile_s", c4 * 1e6, round(c4, 2),
                     target=round(3 * max(compile_s, 0.1), 2), cmp="le"))
     rows.append(row("sim_throughput/8x4_c4/cycles_per_s", 0.0, round(cps4)))
+    # topology axis: simulated throughput of the zoo shapes (same engine,
+    # different tables/router counts — multi_die carries repeater routers)
+    for tname, mk in FULL_TOPOLOGIES:
+        ct, cpst = _measure(NocParams(), streams=1, n_cycles=n_cycles,
+                            iters=iters, topo=mk())
+        rows.append(row(f"sim_throughput/{tname}/cycles_per_s", 0.0,
+                        round(cpst)))
     # vmapped multi-config sweep: N configs through one jit-compiled scan
     # body vs the sequential loop's N per-Sim compiles
     t_seq, t_sweep, n = _sweep_speedup(n_configs=12, n_cycles=600)

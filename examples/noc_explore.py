@@ -1,12 +1,14 @@
 """Explore the cycle-accurate FlooNoC simulator: traffic patterns, ordering
 schemes, the FlooNoC-vs-Occamy comparison (paper Figs. 8, 10, 11),
 physical-channel-count sweeps (PATRONoC-style parallel wide channels),
-collectives on the fabric, and the vmapped multi-config sweep engine.
+collectives on the fabric, the topology zoo (mesh / torus / multi-die /
+Occamy) and the vmapped multi-config sweep engine.
 
 Run:  PYTHONPATH=src python examples/noc_explore.py [--pattern uniform]
       PYTHONPATH=src python examples/noc_explore.py --channels 3 4 5
       PYTHONPATH=src python examples/noc_explore.py --collectives
       PYTHONPATH=src python examples/noc_explore.py --sweep
+      PYTHONPATH=src python examples/noc_explore.py --topology torus --collectives
 """
 import argparse
 
@@ -16,14 +18,31 @@ from repro.core.noc import collective_traffic as CT
 from repro.core.noc import sim as S
 from repro.core.noc import traffic as T
 from repro.core.noc.params import NocParams
-from repro.core.noc.topology import build_mesh, build_occamy
+from repro.core.noc.topology import TOPOLOGIES, build_mesh, build_occamy, build_topology
+
+# demo-sized instances of each zoo topology (~16 tiles; "big" ~32)
+DEMO_KW = {
+    "mesh": dict(nx=4, ny=4),
+    "torus": dict(nx=4, ny=4),
+    "multi_die": dict(n_dies=2, nx=2, ny=4),
+    "occamy": {},
+}
+DEMO_KW_BIG = {**DEMO_KW, "mesh": dict(nx=4, ny=8), "torus": dict(nx=4, ny=8),
+               "multi_die": dict(n_dies=2, nx=2, ny=8)}
 
 
-def pattern_sweep(pattern: str):
+def make_topo(name: str, big: bool = False):
+    return build_topology(name, **(DEMO_KW_BIG if big else DEMO_KW)[name])
+
+
+def pattern_sweep(pattern: str, topology: str = "mesh"):
     """Utilization vs transfer size — all sizes batched through ONE
     jit-compiled vmapped scan (run_sweep) instead of one compile per size."""
-    topo = build_mesh(nx=4, ny=8)
-    print(f"== {pattern}: wide-link utilization vs transfer size ==")
+    topo = make_topo(topology, big=True)
+    if topo.tile_coord is None:
+        raise SystemExit(f"{topology} has no grid coordinates; "
+                         "use --collectives for the Occamy demos")
+    print(f"== {pattern} on {topo.name}: wide-link utilization vs transfer size ==")
     sizes = (1, 4, 16, 32)
     wls = [T.dma_workload(topo, pattern, transfer_kb=kb, n_txns=4)
            for kb in sizes]
@@ -38,18 +57,24 @@ def pattern_sweep(pattern: str):
         print(f"  {kb:3d} kB: util={util:5.1%}  transfers done={done}/{nt*4}")
 
 
-def collectives_demo(nx: int = 4, ny: int = 4):
+def collectives_demo(topology: str = "mesh"):
     """Collective schedules lowered onto the fabric: measured completion
     cycle vs the simulator-calibrated analytical model, and the effective
-    collective bandwidth at paper frequency."""
-    topo = build_mesh(nx=nx, ny=ny)
+    collective bandwidth at paper frequency. Works on every zoo topology;
+    Occamy (no grid coordinates) runs the 1-D ring family over its
+    clusters instead of the 2-D dimension-ordered schedule."""
+    topo = make_topo(topology)
     params = NocParams()
     n = topo.meta["n_tiles"]
-    print(f"== collectives on the {nx}x{ny} mesh (16 kB, wide links) ==")
-    for name, kw in [("all-gather", {}), ("reduce-scatter", {}),
-                     ("all-reduce", {}), ("all-reduce", dict(streams=2)),
-                     ("all-reduce-2d", {}), ("multicast", dict(streams=4)),
-                     ("barrier", {})]:
+    gridded = topo.tile_coord is not None and "nx" in topo.meta
+    print(f"== collectives on {topo.name} ({n} tiles, 16 kB, wide links) ==")
+    configs = [("all-gather", {}), ("reduce-scatter", {}),
+               ("all-reduce", {}), ("all-reduce", dict(streams=2)),
+               ("all-reduce-2d", {}), ("multicast", dict(streams=4)),
+               ("barrier", {})]
+    for name, kw in configs:
+        if name == "all-reduce-2d" and not gridded:
+            continue
         kw = dict(kw)
         if name not in ("barrier",):
             kw.setdefault("data_kb", 16)
@@ -57,27 +82,32 @@ def collectives_demo(nx: int = 4, ny: int = 4):
         sim = S.build_sim(topo, params, CT.to_workload(topo, sched))
         out = S.stats(sim, S.run(sim, 4000))
         meas = CT.measured_cycles(out, topo)
-        est = CT.analytical_cycles(sched, params)
+        est = CT.analytical_cycles(sched, params, topo)
         bw = 16 * 1024 / (meas / params.freq_ghz) if name != "barrier" else 0
         tag = f"{name} (S={sched.n_streams})"
         extra = f"  {bw:6.1f} GB/s eff" if bw else " " * 15
         print(f"  {tag:24s} measured {meas:5d} cyc   model {est:7.1f} cyc "
               f"({(est - meas) / max(meas, 1):+5.1%}){extra}")
-    print(f"  (ring = {n} tiles, snake order; model terms calibrated from "
-          f"NocParams, see repro.core.collectives.FabricCollectiveModel)")
+    order = "snake order" if gridded else "cluster order"
+    print(f"  (ring = {n} tiles, {order}; edge hops walked on the routing "
+          f"tables, model terms from FabricCollectiveModel.for_topology)")
 
 
-def sweep_demo():
+def sweep_demo(topology: str = "mesh"):
     """The vmapped sweep engine: N pattern x size configs in one compile."""
     import time
 
     import jax
 
-    topo = build_mesh(nx=4, ny=4)
+    topo = make_topo(topology)
+    if topo.tile_coord is None:
+        raise SystemExit(f"{topology} has no grid coordinates; "
+                         "use --collectives for the Occamy demos")
     params = NocParams()
-    configs = [(p, kb) for p in ("uniform", "shuffle", "bit-complement",
-                                 "transpose", "neighbor", "tiled-matmul")
-               for kb in (1, 4)]
+    pats = ["uniform", "shuffle", "bit-complement", "transpose", "neighbor"]
+    if topo.meta.get("n_hbm", 0):
+        pats.append("tiled-matmul")
+    configs = [(p, kb) for p in pats for kb in (1, 4)]
     wls = [T.dma_workload(topo, p, transfer_kb=kb, n_txns=4)
            for p, kb in configs]
     sim = S.build_sim(topo, params, wls[0])
@@ -86,7 +116,8 @@ def sweep_demo():
     jax.block_until_ready(sts[0].cycle)
     dt = time.perf_counter() - t0
     nt = topo.meta["n_tiles"]
-    print(f"== vmapped sweep: {len(wls)} configs, one compile, {dt:.1f}s ==")
+    print(f"== vmapped sweep on {topo.name}: {len(wls)} configs, "
+          f"one compile, {dt:.1f}s ==")
     for (p, kb), st in zip(configs, sts):
         out = S.stats(sim, st)
         beats = out["beats_rcvd"][:nt].astype(float)
@@ -160,6 +191,9 @@ def channel_sweep(counts, pattern: str):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--pattern", default="uniform", choices=T.PATTERNS)
+    ap.add_argument("--topology", default="mesh", choices=TOPOLOGIES,
+                    help="fabric shape for the pattern/collective/sweep "
+                         "demos (occamy supports --collectives only)")
     ap.add_argument("--channels", type=int, nargs="*", default=None,
                     help="sweep physical channel counts (>= 3) instead of "
                          "the default demos")
@@ -171,9 +205,11 @@ if __name__ == "__main__":
     if args.channels:
         channel_sweep(args.channels, args.pattern)
     elif args.collectives:
-        collectives_demo()
+        collectives_demo(args.topology)
     elif args.sweep:
-        sweep_demo()
+        sweep_demo(args.topology)
+    elif args.topology != "mesh":
+        pattern_sweep(args.pattern, args.topology)
     else:
         pattern_sweep(args.pattern)
         ordering_demo()

@@ -220,6 +220,28 @@ class FabricCollectiveModel:
             rt_cycles=float(params.mem_lat + params.ni_rsp_lat),
         )
 
+    @classmethod
+    def for_topology(cls, topo, params) -> "FabricCollectiveModel":
+        """Per-topology terms. The engine models every traversal — mesh
+        router, torus wrap link, express hop, die-to-die repeater, Occamy
+        Xbar/spill register — as the same 2-stage router, so the default
+        per-traversal cost is uniform and the topology differences live in
+        the edge-hop paths each schedule computes from ``Topology.hops``
+        (a torus wrap edge is 2 cycles, a multi-die boundary edge is
+        ``2 * (2 + d2d)``). A topology whose links are modeled differently
+        can override the link/serialization terms through its ``meta``
+        (``hop_cycles`` / ``issue_cycles`` / ``rt_cycles``); the new-
+        topology tests validate the resulting model against measured
+        completion cycles (exact on 1-D torus rings, <=10% on multi-die).
+        """
+        base = cls.from_noc_params(params)
+        meta = getattr(topo, "meta", None) or {}
+        return cls(
+            hop_cycles=float(meta.get("hop_cycles", base.hop_cycles)),
+            issue_cycles=float(meta.get("issue_cycles", base.issue_cycles)),
+            rt_cycles=float(meta.get("rt_cycles", base.rt_cycles)),
+        )
+
     def edge_cycles(self, beats: int, hops: int, streams: int = 1) -> float:
         return max(streams * beats,
                    beats + self.hop_cycles * hops + self.issue_cycles)
@@ -229,14 +251,23 @@ class FabricCollectiveModel:
 
         ``paths``: [n_chunks, n_steps] router traversals of the edge each
         chunk crosses at each step. Chunks move concurrently; the phase
-        finishes when the slowest chunk has walked its whole path, paying
-        the per-edge cost at every step plus the ``(streams - 1) * beats``
-        stagger with which the last stream's pipeline drains."""
+        finishes when the slowest chunk has walked its whole path. Every
+        step but the last paces the chunk at the per-edge cost; the final
+        step completes one link latency (``beats + hop_cycles * hops``)
+        after the last stream's send begins — offset by the
+        ``(streams - 1) * beats`` serializer stagger — NOT a full
+        ``streams * beats`` pace slot, which matters on serializer-bound
+        uniform rings (e.g. a multi-stream torus ring, where every edge is
+        a wrap-free unit hop)."""
         paths = np.asarray(paths)
+        if paths.size == 0:  # zero-step phase (e.g. a 1-wide ring): no traffic
+            return 0.0
         per_edge = np.maximum(
             streams * beats,
             beats + self.hop_cycles * paths + self.issue_cycles)
-        per_chunk = per_edge.sum(axis=1) + (streams - 1) * beats
+        last = beats + self.hop_cycles * paths[:, -1] + self.issue_cycles
+        per_chunk = (per_edge[:, :-1].sum(axis=1)
+                     + (streams - 1) * beats + last)
         return float(per_chunk.max())
 
     def serial_unicast_cycles(self, beats: int, hop_lists) -> float:

@@ -1,4 +1,13 @@
 from repro.core.noc.params import NocParams
-from repro.core.noc.topology import Topology, build_mesh, build_occamy
+from repro.core.noc.topology import (
+    TOPOLOGIES,
+    Topology,
+    build_mesh,
+    build_multi_die,
+    build_occamy,
+    build_topology,
+    build_torus,
+)
 
-__all__ = ["NocParams", "Topology", "build_mesh", "build_occamy"]
+__all__ = ["NocParams", "TOPOLOGIES", "Topology", "build_mesh",
+           "build_multi_die", "build_occamy", "build_topology", "build_torus"]

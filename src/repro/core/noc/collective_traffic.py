@@ -97,8 +97,10 @@ class CollectiveSchedule:
 # ring embeddings
 # ----------------------------------------------------------------------
 def snake_order(topo: Topology) -> np.ndarray:
-    """Boustrophedon tile order: consecutive ring neighbours are mesh
-    neighbours everywhere except the single wrap-around edge."""
+    """Boustrophedon tile order: consecutive ring neighbours are grid
+    neighbours everywhere except the single wrap-around edge (which a torus
+    closes with a wrap link, and a multi-die fabric prices through its
+    boundary chains)."""
     nx, ny = topo.meta["nx"], topo.meta["ny"]
     order = []
     for y in range(ny):
@@ -107,12 +109,23 @@ def snake_order(topo: Topology) -> np.ndarray:
     return np.asarray(order, np.int32)
 
 
+def ring_order(topo: Topology) -> np.ndarray:
+    """Default ring embedding for a topology: boustrophedon over (nx, ny)
+    grids (mesh / torus / multi-die global coords), plain endpoint order on
+    coordinate-free fabrics (Occamy's hierarchical Xbars)."""
+    if topo.tile_coord is not None and "nx" in topo.meta and "ny" in topo.meta:
+        return snake_order(topo)
+    return np.arange(topo.meta["n_tiles"], dtype=np.int32)
+
+
 def _ring_hops(topo: Topology, order: np.ndarray) -> np.ndarray:
-    """Router traversals of each directed ring edge order[i] -> order[i+1]."""
-    coord = topo.tile_coord
+    """Router traversals of each directed ring edge order[i] -> order[i+1],
+    walked on the routing tables (``Topology.hops``) so torus wrap links,
+    express links and die-to-die repeater chains are all priced by the
+    fabric that actually carries them — not by mesh-coordinate arithmetic."""
     nxt = np.roll(order, -1)
-    d = np.abs(coord[order] - coord[nxt]).sum(axis=1)
-    return (d + 1).astype(np.int32)  # manhattan + 1 = routers visited
+    return np.asarray([topo.hops(int(a), int(b)) for a, b in zip(order, nxt)],
+                      np.int32)
 
 
 def _chunk_paths(edge_hops: np.ndarray, n_steps: int) -> np.ndarray:
@@ -144,7 +157,7 @@ def _ring_schedule(topo: Topology, name: str, laps_steps: int, beats: int,
     received bursts (the chunk forwarded at step k is the one received at
     step k-1)."""
     E = topo.n_endpoints
-    order = snake_order(topo) if order is None else np.asarray(order, np.int32)
+    order = ring_order(topo) if order is None else np.asarray(order, np.int32)
     n = len(order)
     succ = np.empty((n,), np.int32)
     succ[order] = np.roll(order, -1)  # succ[tile] = next tile on the ring
@@ -197,7 +210,10 @@ def all_reduce_2d(topo: Topology, *, data_kb: float = 16,
                   streams: int = 1) -> CollectiveSchedule:
     """Dimension-ordered 2-D all-reduce (XY-routing analogue): a ring
     all-reduce along each row, then one along each column; column steps are
-    gated on the full row phase having arrived at that tile."""
+    gated on the full row phase having arrived at that tile. Works on any
+    (nx, ny)-gridded topology: on a torus the (x+1) % nx ring successor is
+    a wrap link (no turnaround penalty), on a multi-die fabric the row
+    rings cross the boundary repeater chains."""
     E = topo.n_endpoints
     nx, ny = topo.meta["nx"], topo.meta["ny"]
     nt = topo.meta["n_tiles"]
@@ -221,14 +237,18 @@ def all_reduce_2d(topo: Topology, *, data_kb: float = 16,
     txns[:nt] = K
     expect = np.zeros((E, streams), np.int32)
     expect[:nt] = K
-    # phase hop structure: row rings wrap across nx-1 routers, column rings
-    # across ny-1 (all row rings are congruent, so one path set suffices)
-    row_hops = np.full((nx,), 2, np.int32)
-    row_hops[nx - 1] = nx  # wrap edge: manhattan nx-1, +1 router
-    col_hops = np.full((ny,), 2, np.int32)
-    col_hops[ny - 1] = ny
-    phases = (Phase(beats=b_row, paths=_chunk_paths(row_hops, k_row)),
-              Phase(beats=b_col, paths=_chunk_paths(col_hops, k_col)))
+    # phase hop structure from the routing tables: every row/column ring is
+    # walked with Topology.hops (mesh: 2/edge + an nx-router wrap; torus:
+    # 2/edge everywhere; multi-die: boundary edges include the repeater
+    # chain), and the completion bound is the max over all rings' chunks
+    rows_ = [np.arange(nx, dtype=np.int32) + y * nx for y in range(ny)]
+    cols_ = [np.arange(ny, dtype=np.int32) * nx + x for x in range(nx)]
+    row_paths = np.vstack([_chunk_paths(_ring_hops(topo, r), k_row)
+                           for r in rows_])
+    col_paths = np.vstack([_chunk_paths(_ring_hops(topo, c), k_col)
+                           for c in cols_])
+    phases = (Phase(beats=b_row, paths=row_paths),
+              Phase(beats=b_col, paths=col_paths))
     return CollectiveSchedule(
         name="all-reduce-2d", dst_seq=dst, gate=gate, beats_seq=bts,
         txns=txns, expect_rx=expect, phases=phases,
@@ -335,9 +355,16 @@ def check_schedule(sched: CollectiveSchedule) -> None:
     np.testing.assert_array_equal(rx, sched.expect_rx)
 
 
-def analytical_cycles(sched: CollectiveSchedule, params: NocParams) -> float:
-    """Simulator-calibrated completion-cycle estimate for a schedule."""
-    model = FabricCollectiveModel.from_noc_params(params)
+def analytical_cycles(sched: CollectiveSchedule, params: NocParams,
+                      topo: Topology | None = None) -> float:
+    """Simulator-calibrated completion-cycle estimate for a schedule.
+
+    Pass ``topo`` to use the per-topology model terms
+    (``FabricCollectiveModel.for_topology``); the schedule's edge-hop paths
+    already price the topology's links via ``Topology.hops``."""
+    model = (FabricCollectiveModel.for_topology(topo, params)
+             if topo is not None
+             else FabricCollectiveModel.from_noc_params(params))
     S = sched.n_streams
     if sched.model == "serial-unicast":
         return model.serial_unicast_cycles(sched.meta["beats"],

@@ -94,6 +94,7 @@ class EndpointState:
     # write burst serializer (one active burst per endpoint)
     w_stream: jnp.ndarray  # [E] active stream (-1)
     w_left: jnp.ndarray  # [E] beats left
+    w_beats: jnp.ndarray  # [E] total beats of the active burst (rides F_META)
     w_dst: jnp.ndarray  # [E]
     w_txn: jnp.ndarray  # [E]
     w_ts: jnp.ndarray  # [E]
@@ -120,6 +121,8 @@ class EndpointState:
     beats_rcvd: jnp.ndarray  # [E] wide payload beats received (reads at src / writes at dst)
     beats_sent: jnp.ndarray  # [E]
     ni_stall: jnp.ndarray  # [E] cycles a ready request was stalled by ordering
+    eg_overflow: jnp.ndarray  # [E] cycles req-channel delivery was stalled
+    # because the rsp egress queue was full (would have overflowed pre-guard)
     hbm_served: jnp.ndarray  # [E] beats served by this endpoint's memory
     n_sent: jnp.ndarray  # [E]
     d_done: jnp.ndarray  # [E, C] transfers fully completed
@@ -127,10 +130,14 @@ class EndpointState:
     first_rx: jnp.ndarray  # [E] cycle of the first payload beat (-1)
 
 
-# packed memory-queue layout (trailing axis, like flits)
-MQ_FIELDS = ("src", "txn", "beats", "kind", "ts")
+# packed memory-queue layout (trailing axis, like flits). ``beats`` is how
+# many response beats the server emits; ``meta`` rides into every response
+# flit's F_META and carries the *original* transfer size (so the issuer can
+# retire exactly the beats it issued — exact RoB credit accounting even for
+# variable-size scheduled transfers).
+MQ_FIELDS = ("src", "txn", "beats", "kind", "ts", "meta")
 NMQ = len(MQ_FIELDS)
-MQ_SRC, MQ_TXN, MQ_BEATS, MQ_KIND, MQ_TS = range(NMQ)
+MQ_SRC, MQ_TXN, MQ_BEATS, MQ_KIND, MQ_TS, MQ_META = range(NMQ)
 
 
 def init_endpoints(E: int, params: NocParams, streams: int) -> EndpointState:
@@ -144,8 +151,8 @@ def init_endpoints(E: int, params: NocParams, streams: int) -> EndpointState:
         n_acc=jnp.zeros((E,), jnp.float32), n_seq=z(E),
         d_txns_left=z(E, streams), d_outst=z(E, streams), d_seq=z(E, streams),
         d_beats_got=z(E, streams), rx_bursts=z(E, streams),
-        w_stream=jnp.full((E,), -1, jnp.int32), w_left=z(E), w_dst=z(E),
-        w_txn=z(E), w_ts=z(E),
+        w_stream=jnp.full((E,), -1, jnp.int32), w_left=z(E), w_beats=z(E),
+        w_dst=z(E), w_txn=z(E), w_ts=z(E),
         t_aww_left=z(E), t_aww_src=z(E), t_aww_txn=z(E),
         mq=z(E, Q, NMQ), mq_cnt=z(E),
         m_busy=z(E), m_beats=z(E), m_flit=empty_flits((E,)),
@@ -154,7 +161,8 @@ def init_endpoints(E: int, params: NocParams, streams: int) -> EndpointState:
         eg=z(C, E, EQ, NF), eg_ready=z(C, E, EQ),
         eg_cnt=z(C, E),
         lat_sum=jnp.zeros((E,), jnp.float32), lat_cnt=z(E),
-        beats_rcvd=z(E), beats_sent=z(E), ni_stall=z(E), hbm_served=z(E),
+        beats_rcvd=z(E), beats_sent=z(E), ni_stall=z(E), eg_overflow=z(E),
+        hbm_served=z(E),
         n_sent=z(E), d_done=z(E, streams),
         last_rx=z(E), first_rx=jnp.full((E,), -1, jnp.int32),
     )
@@ -171,26 +179,26 @@ def _hash(a, b, c):
     return (h & u(0x7FFFFFFF)).astype(jnp.int32)
 
 
-def _pack_mq(src, txn, beats, kind, ts) -> jnp.ndarray:
+def _pack_mq(src, txn, beats, kind, ts, meta) -> jnp.ndarray:
     ref = jnp.asarray(src, jnp.int32)
     parts = [
         jnp.broadcast_to(jnp.asarray(v, jnp.int32), ref.shape)
-        for v in (ref, txn, beats, kind, ts)
+        for v in (ref, txn, beats, kind, ts, meta)
     ]
     return jnp.stack(parts, axis=-1)
 
 
-def _mq_push(mq, mq_cnt, mask, src, txn, beats, kind, ts):
+def _mq_push(mq, mq_cnt, mask, src, txn, beats, kind, ts, meta):
     """Push one request per endpoint where mask [E]. mq: [E, Q, NMQ]."""
     Q = mq.shape[1]
     idx = jnp.clip(mq_cnt, 0, Q - 1)
     onehot = jax.nn.one_hot(idx, Q, dtype=jnp.bool_) & mask[:, None]
-    vals = _pack_mq(src, txn, beats, kind, ts)  # [E, NMQ]
+    vals = _pack_mq(src, txn, beats, kind, ts, meta)  # [E, NMQ]
     mq = jnp.where(onehot[..., None], vals[:, None, :], mq)
     return mq, mq_cnt + mask.astype(jnp.int32)
 
 
-def _mq_push_multi(mq, mq_cnt, mask, src, txn, beats, kind, ts):
+def _mq_push_multi(mq, mq_cnt, mask, src, txn, beats, kind, ts, meta):
     """Push up to one request per (channel, endpoint) where mask [C, E]; same-
     endpoint pushes from different channels land in consecutive slots (channel
     order). All value args are [C, E] (or broadcastable scalars)."""
@@ -200,7 +208,7 @@ def _mq_push_multi(mq, mq_cnt, mask, src, txn, beats, kind, ts):
     idx = jnp.clip(mq_cnt[None, :] + offset, 0, Q - 1)
     onehot = jax.nn.one_hot(idx, Q, dtype=jnp.bool_) & mask[..., None]  # [C, E, Q]
     vals = _pack_mq(jnp.broadcast_to(jnp.asarray(src, jnp.int32), mask.shape),
-                    txn, beats, kind, ts)  # [C, E, NMQ]
+                    txn, beats, kind, ts, meta)  # [C, E, NMQ]
     # prefix offsets give each channel its own slot; on overflow the clip can
     # alias several channels onto slot Q-1, so keep only the highest channel
     # per slot (last-write-wins, like sequential per-channel pushes)

@@ -199,16 +199,20 @@ def _inject_one(st: FabricState, tb: FabricTables, flit: jnp.ndarray, want: jnp.
 
 
 # channel-batched entry points: vmap the single-channel logic over the leading
-# channel axis of FabricState (tables and ingress space are shared).
-_cycle_all = jax.vmap(_cycle_one, in_axes=(0, None, None))
+# channel axis of FabricState (tables are shared; ingress space is per-channel
+# so an endpoint can backpressure one channel — e.g. hold narrow requests
+# while its rsp egress queue is full — without stalling the others).
+_cycle_all = jax.vmap(_cycle_one, in_axes=(0, None, 0))
 _inject_all = jax.vmap(_inject_one, in_axes=(0, None, 0, 0))
 
 
 def fabric_cycle(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarray):
     """One cycle of every channel at once.
 
-    ep_ingress_space: [E] bool — endpoint can accept one flit per channel this
-    cycle. Returns (state', ep_flit [C, E, NF], ep_valid [C, E])."""
+    ep_ingress_space: [C, E] bool — endpoint can accept one flit on that
+    channel this cycle (a refused flit stays in the router's output buffer:
+    memory-server-style backpressure into the fabric).
+    Returns (state', ep_flit [C, E, NF], ep_valid [C, E])."""
     return _cycle_all(st, tb, ep_ingress_space)
 
 

@@ -74,10 +74,13 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
     rsp_ready = jnp.broadcast_to(
         cycle + params.ni_rsp_lat + params.mem_lat + params.ni_req_lat,
         (E,)).astype(jnp.int32)
+    # the req-channel delivery is gated on rsp-egress space upstream (see
+    # Sim.step), so this push can never overflow the queue
     eg, eg_ready, eg_cnt = epm._eg_push(st.eg, st.eg_ready, st.eg_cnt, CH_RSP,
                                         is_nreq, rsp_flit, rsp_ready)
     mq, mq_cnt = epm._mq_push(st.mq, st.mq_cnt, is_war, f[:, F_SRC],
-                              f[:, F_TXN], f[:, F_META], WIDE_R, f[:, F_TS])
+                              f[:, F_TXN], f[:, F_META], WIDE_R, f[:, F_TS],
+                              f[:, F_META])
 
     # ---- wide kinds (any channel) ----
     S = st.d_outst.shape[1]  # streams
@@ -89,9 +92,12 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
     r_done = is_r & (flits[..., F_LAST] > 0)
     d_outst = st.d_outst.at[eb, stream].add(-r_done.astype(jnp.int32))
     d_done = st.d_done.at[eb, stream].add(r_done.astype(jnp.int32))
-    full_beats = jnp.full((E,), wl.dma_beats, jnp.int32)
+    # retire exactly the beats that transfer issued (response F_META carries
+    # the original burst size) — NOT the scalar wl.dma_beats, which over- or
+    # under-frees RoB credits on variable-size scheduled (collective) DMA
     ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, r_done,
-                                         flits[..., F_TXN], full_beats, params)
+                                         flits[..., F_TXN],
+                                         flits[..., F_META], params)
     # write bursts arriving (we are the target); wormhole => no interleave
     is_w = valid & (kind == WIDE_AW_W)
     beats_rcvd = st.beats_rcvd + (is_r | is_w).sum(axis=0)
@@ -102,7 +108,7 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
     w_tail = is_w & (flits[..., F_LAST] > 0)
     mq, mq_cnt = epm._mq_push_multi(mq, mq_cnt, w_tail, flits[..., F_SRC],
                                     flits[..., F_TXN], 1, WIDE_B,
-                                    flits[..., F_TS])
+                                    flits[..., F_TS], flits[..., F_META])
     # completed write bursts per stream: the data-dependency signal the
     # scheduled (collective) DMA gates on
     rx_bursts = st.rx_bursts.at[eb, stream].add(w_tail.astype(jnp.int32))
@@ -121,8 +127,10 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
     stream_b = jnp.clip(f[:, F_TXN], 0, S - 1)
     d_outst = d_outst.at[eidx, stream_b].add(-is_b.astype(jnp.int32))
     d_done = d_done.at[eidx, stream_b].add(is_b.astype(jnp.int32))
+    # B responses carry the written burst's beat count in F_META: retire
+    # what was actually issued (exact RoB credits for mixed-size schedules)
     ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, is_b, f[:, F_TXN],
-                                         jnp.full((E,), wl.dma_beats), params)
+                                         f[:, F_META], params)
 
     return dataclasses.replace(
         st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob, mq=mq, mq_cnt=mq_cnt,
@@ -228,13 +236,14 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
         eg, eg_ready, eg_cnt = epm._eg_push(
             eg, eg_ready, eg_cnt, CH_REQ, fire_d, flit_ar,
             jnp.broadcast_to(cycle + src_delay, (E,)).astype(jnp.int32))
-        w_stream, w_left, w_dst, w_txn, w_ts = (
-            st.w_stream, st.w_left, st.w_dst, st.w_txn, st.w_ts)
+        w_stream, w_left, w_beats, w_dst, w_txn, w_ts = (
+            st.w_stream, st.w_left, st.w_beats, st.w_dst, st.w_txn, st.w_ts)
     else:
         # claim the write serializer
         fire_d = any_pick & (st.w_stream < 0)
         w_stream = jnp.where(fire_d, pick, st.w_stream)
         w_left = jnp.where(fire_d, pick_beats, st.w_left)
+        w_beats = jnp.where(fire_d, pick_beats, st.w_beats)
         w_dst = jnp.where(fire_d, pick_dst, st.w_dst)
         w_txn = jnp.where(fire_d, pick_txn, st.w_txn)
         w_ts = jnp.where(fire_d, jnp.broadcast_to(cycle, (E,)).astype(jnp.int32), st.w_ts)
@@ -254,7 +263,9 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
         space_w = jnp.take_along_axis(eg_cnt, wch[None, :], axis=0)[0] < EQ
         emit = active & space_w
         last = jnp.where(emit, (w_left == 1).astype(jnp.int32), 0)
-        flit_w = eng.pack_flit(w_dst, eidx, WIDE_AW_W, w_txn, last, w_ts, w_left)
+        # META carries the burst's TOTAL beats so the target can echo it in
+        # the B response (exact retirement credit at the issuer)
+        flit_w = eng.pack_flit(w_dst, eidx, WIDE_AW_W, w_txn, last, w_ts, w_beats)
         eg, eg_ready, eg_cnt = epm._eg_push(
             eg, eg_ready, eg_cnt, wch, emit, flit_w,
             jnp.broadcast_to(cycle + 1, (E,)).astype(jnp.int32))
@@ -268,8 +279,8 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
         st, eg=eg, eg_ready=eg_ready, eg_cnt=eg_cnt, ni_cnt=ni_cnt, ni_dst=ni_dst,
         rob_credit=rob, n_acc=n_acc, n_seq=n_seq, n_sent=n_sent,
         d_txns_left=d_txns_left, d_outst=d_outst, d_seq=d_seq,
-        w_stream=w_stream, w_left=w_left, w_dst=w_dst, w_txn=w_txn, w_ts=w_ts,
-        beats_sent=beats_sent, ni_stall=ni_stall,
+        w_stream=w_stream, w_left=w_left, w_beats=w_beats, w_dst=w_dst,
+        w_txn=w_txn, w_ts=w_ts, beats_sent=beats_sent, ni_stall=ni_stall,
     )
 
 
@@ -298,9 +309,11 @@ def _memory(st: epm.EndpointState, cycle, params: NocParams, is_hbm, is_mem):
     m_active = st.m_active | can_pop
     m_busy = jnp.where(can_pop, params.mem_lat + params.ni_rsp_lat, m_busy)
     m_beats = jnp.where(can_pop, head[:, epm.MQ_BEATS], st.m_beats)
+    # response template META = the original transfer size (MQ_META), kept
+    # constant over the burst so the issuer retires exactly what it issued
     new_flit = eng.pack_flit(head[:, epm.MQ_SRC], eidx, head[:, epm.MQ_KIND],
                              head[:, epm.MQ_TXN], 0, head[:, epm.MQ_TS],
-                             head[:, epm.MQ_BEATS])
+                             head[:, epm.MQ_META])
     m_flit = jnp.where(can_pop[:, None], new_flit, st.m_flit)
 
     # emit a beat when serving (channel picked per endpoint: wide reads stripe
@@ -312,7 +325,6 @@ def _memory(st: epm.EndpointState, cycle, params: NocParams, is_hbm, is_mem):
     space = jnp.take_along_axis(st.eg_cnt, ch_of_kind[None, :], axis=0)[0] < EQ
     emit = m_active & (m_busy == 0) & tok_ok & space & (m_beats > 0)
     out = m_flit.at[:, F_LAST].set((m_beats == 1).astype(jnp.int32))
-    out = out.at[:, F_META].set(m_beats)
     ready = jnp.broadcast_to(cycle + params.ni_req_lat, (E,)).astype(jnp.int32)
 
     eg, eg_ready_, eg_cnt = epm._eg_push(st.eg, st.eg_ready, st.eg_cnt,
@@ -355,12 +367,24 @@ class Sim:
         wl = self.wl if wl is None else wl
         cycle = st.cycle
         E = self.topo.n_endpoints
-        # 1) fabric cycle, all channels at once (endpoints always have ingest
-        #    capacity: processing is combinational on delivery)
-        space = jnp.ones((E,), bool)
+        C = self.params.n_channels
+        EQ = st.eps.eg_ready.shape[-1]
+        # 1) fabric cycle, all channels at once. Ingest is combinational on
+        #    delivery except for one queue: a delivered narrow request pushes
+        #    its response into the CH_RSP egress queue, so req-channel
+        #    delivery is held (memory-server-style stall into the fabric)
+        #    while that queue is full — previously the push silently
+        #    overwrote the newest entry, corrupting a flit.
+        rsp_free = st.eps.eg_cnt[CH_RSP] < EQ
+        space = jnp.ones((C, E), bool).at[CH_REQ].set(rsp_free)
+        er, ep_p = self.tables.ep_attach[:, 0], self.tables.ep_attach[:, 1]
+        req_waiting = st.fabric.out_cnt[CH_REQ, er, ep_p] > 0
         fabric, ep_flit, ep_valid = eng.fabric_cycle(st.fabric, self.tables, space)
         # 2) endpoint processing
         eps = _ingest(st.eps, ep_flit, ep_valid, cycle, self.params, wl)
+        eps = dataclasses.replace(
+            eps, eg_overflow=eps.eg_overflow
+            + (req_waiting & ~rsp_free).astype(jnp.int32))
         eps = _generators(eps, cycle, self.params, wl, wl.n_tiles)
         eps = _memory(eps, cycle, self.params, self.is_hbm, self.is_mem)
         # 3) egress -> injection: every channel's head whose ready time came
@@ -461,9 +485,17 @@ def run_sweep(sim: Sim, wls: list[epm.Workload], n_cycles: int) -> list[SimState
                 or w.unique_txn_per_stream != ref.unique_txn_per_stream
                 or w.n_tiles != ref.n_tiles or w.n_streams != ref.n_streams):
             raise ValueError("sweep workloads must share static workload attributes")
-        for f in ("dma_dst_seq", "dma_gate", "dma_beats_seq"):
+        # the swept-field list is derived from the REFERENCE workload, so a
+        # field the reference leaves unset would be silently dropped for the
+        # whole batch (the config would run with the wrong traffic): require
+        # presence agreement for every sweepable field, not just the
+        # schedule triple
+        for f in SWEEP_FIELDS:
             if (getattr(w, f) is None) != (getattr(ref, f) is None):
-                raise ValueError(f"sweep workloads must agree on {f} presence")
+                raise ValueError(
+                    f"sweep workloads must agree on {f} presence (swept "
+                    "fields are taken from the reference sim.wl, so a field "
+                    "only some workloads set would be silently ignored)")
     fields = tuple(f for f in SWEEP_FIELDS if getattr(ref, f) is not None)
     batch = tuple(
         jnp.stack([jnp.asarray(getattr(w, f)) for w in wls]) for f in fields
@@ -485,6 +517,7 @@ def stats(sim: Sim, st: SimState) -> dict:
         "beats_sent": np.asarray(eps.beats_sent),
         "hbm_served": np.asarray(eps.hbm_served),
         "ni_stalls": np.asarray(eps.ni_stall),
+        "eg_overflow": np.asarray(eps.eg_overflow),
         "dma_done": np.asarray(eps.d_done),
         "rx_bursts": np.asarray(eps.rx_bursts),
         "last_rx": np.asarray(eps.last_rx),

@@ -39,6 +39,7 @@ class Topology:
 
     def hops(self, src_ep: int, dst_ep: int) -> int:
         """Router traversals from src endpoint to dst endpoint (for checks)."""
+        pe = self.port_ep  # hoisted: the property rebuilds an [R, P] array
         r, p = self.ep_attach[src_ep]
         n = 0
         cur = r
@@ -46,7 +47,7 @@ class Topology:
         while True:
             n += 1
             out_p = self.route[cur, dst_ep]
-            if (self.port_ep[cur, out_p]) == dst_ep:
+            if pe[cur, out_p] == dst_ep:
                 return n
             nxt, _ = self.link_to[cur, out_p]
             assert nxt >= 0, "route leads off fabric"
@@ -60,11 +61,24 @@ class Topology:
 # HBM endpoints on the west edge - one per row, paper Sec. IV-B)
 # ----------------------------------------------------------------------
 N, E, S, W, L = 0, 1, 2, 3, 4  # port ids
+XE, XW, YN, YS = 5, 6, 7, 8  # express ports (span-`express` links), radix 9
 
 
-def build_mesh(nx: int = 4, ny: int = 8, hbm_west: bool = True) -> Topology:
+def build_mesh(nx: int = 4, ny: int = 8, hbm_west: bool = True,
+               express: int = 0) -> Topology:
+    """2-D mesh with dimension-ordered (XY) table routing.
+
+    ``express > 0`` raises the router radix from 5 to 9 by adding express
+    links that span ``express`` columns/rows (a span-k flattened mesh):
+    router (x, y) also links to (x+k, y) and (x, y+k) where those exist,
+    and the tables take the express hop whenever the remaining distance in
+    the dimension being routed is >= k. With ``express=0`` (the default)
+    the builder is bit-identical to the classic radix-5 mesh. Chiplet-style
+    partitions of the same grid are built by ``build_multi_die``.
+    """
     R = nx * ny
-    P = 5
+    k = int(express)
+    P = 9 if k > 0 else 5
     rid = lambda x, y: y * nx + x
 
     link_to = np.full((R, P, 2), -1, np.int32)
@@ -79,6 +93,15 @@ def build_mesh(nx: int = 4, ny: int = 8, hbm_west: bool = True) -> Topology:
                 link_to[r, E] = (rid(x + 1, y), W)
             if x > 0:
                 link_to[r, W] = (rid(x - 1, y), E)
+            if k > 0:
+                if x + k < nx:
+                    link_to[r, XE] = (rid(x + k, y), XW)
+                if x - k >= 0:
+                    link_to[r, XW] = (rid(x - k, y), XE)
+                if y + k < ny:
+                    link_to[r, YN] = (rid(x, y + k), YS)
+                if y - k >= 0:
+                    link_to[r, YS] = (rid(x, y - k), YN)
 
     # endpoints: tiles 0..R-1 on local ports; HBM channels ny..: west edge
     eps = [(rid(x, y), L) for y in range(ny) for x in range(nx)]
@@ -92,7 +115,18 @@ def build_mesh(nx: int = 4, ny: int = 8, hbm_west: bool = True) -> Topology:
     for e, (r, p) in enumerate(eps):
         tile_coord[e] = (r % nx, r // nx)
 
-    # XY routing tables: route X first, then Y (paper: dimension-ordered)
+    # XY routing tables: route X first, then Y (paper: dimension-ordered);
+    # express hops are taken while the remaining distance covers the span
+    def _step_x(x, ex):
+        if ex > x:
+            return XE if k > 0 and ex - x >= k and x + k < nx else E
+        return XW if k > 0 and x - ex >= k and x - k >= 0 else W
+
+    def _step_y(y, ey):
+        if ey > y:
+            return YN if k > 0 and ey - y >= k and y + k < ny else N
+        return YS if k > 0 and y - ey >= k and y - k >= 0 else S
+
     route = np.full((R, Etot), -1, np.int32)
     for r in range(R):
         x, y = r % nx, r // nx
@@ -109,15 +143,170 @@ def build_mesh(nx: int = 4, ny: int = 8, hbm_west: bool = True) -> Topology:
             if (x, y) == (ex, ey):
                 route[r, e] = ep_port if e < n_tiles else W
             elif x != ex:
-                route[r, e] = E if ex > x else W
+                route[r, e] = _step_x(x, ex)
             else:
-                route[r, e] = N if ey > y else S
+                route[r, e] = _step_y(y, ey)
     return Topology(
         n_routers=R, n_ports=P, n_endpoints=Etot, link_to=link_to,
         ep_attach=ep_attach, route=route, name=f"mesh{nx}x{ny}",
         tile_coord=tile_coord,
-        meta={"nx": nx, "ny": ny, "n_tiles": n_tiles, "n_hbm": ny if hbm_west else 0},
+        meta={"nx": nx, "ny": ny, "n_tiles": n_tiles,
+              "n_hbm": ny if hbm_west else 0, "express": k},
     )
+
+
+# ----------------------------------------------------------------------
+# 2D torus (wrap links on every row/column ring; FlooNoC's table-routed
+# router expresses it with the same engine — paper Sec. III)
+# ----------------------------------------------------------------------
+def build_torus(nx: int = 4, ny: int = 4) -> Topology:
+    """2-D torus: the mesh plus wrap links closing every row and column.
+
+    Routing is dateline-free dimension-ordered shortest-direction: each
+    router's table independently sends a flit the shorter way around the
+    X ring (ties go East), then the Y ring (ties go North). Every hop
+    strictly shrinks the remaining ring distance in the dimension being
+    routed, so table walks terminate without dateline bookkeeping. No HBM
+    endpoints: the edge W/S ports carry the wrap links. ``ny=1`` (or
+    ``nx=1``) degenerates to a 1-D torus ring.
+    """
+    R = nx * ny
+    P = 5
+    rid = lambda x, y: y * nx + x
+
+    link_to = np.full((R, P, 2), -1, np.int32)
+    for y in range(ny):
+        for x in range(nx):
+            r = rid(x, y)
+            if ny > 1:
+                link_to[r, N] = (rid(x, (y + 1) % ny), S)
+                link_to[r, S] = (rid(x, (y - 1) % ny), N)
+            if nx > 1:
+                link_to[r, E] = (rid((x + 1) % nx, y), W)
+                link_to[r, W] = (rid((x - 1) % nx, y), E)
+
+    eps = [(rid(x, y), L) for y in range(ny) for x in range(nx)]
+    ep_attach = np.array(eps, np.int32)
+    Etot = len(eps)
+    tile_coord = np.zeros((Etot, 2), np.int32)
+    for e, (r, p) in enumerate(eps):
+        tile_coord[e] = (r % nx, r // nx)
+
+    route = np.full((R, Etot), -1, np.int32)
+    for r in range(R):
+        x, y = r % nx, r // nx
+        for e in range(Etot):
+            er, ep_port = eps[e]
+            ex, ey = er % nx, er // nx
+            if (x, y) == (ex, ey):
+                route[r, e] = ep_port
+            elif x != ex:
+                dx = (ex - x) % nx
+                route[r, e] = E if dx <= nx - dx else W
+            else:
+                dy = (ey - y) % ny
+                route[r, e] = N if dy <= ny - dy else S
+    return Topology(
+        n_routers=R, n_ports=P, n_endpoints=Etot, link_to=link_to,
+        ep_attach=ep_attach, route=route, name=f"torus{nx}x{ny}",
+        tile_coord=tile_coord,
+        meta={"nx": nx, "ny": ny, "n_tiles": Etot, "n_hbm": 0},
+    )
+
+
+# ----------------------------------------------------------------------
+# Multi-die: K mesh dies side by side, stitched per row by die-to-die
+# boundary links modeled as repeater chains (Occamy-style spill registers)
+# ----------------------------------------------------------------------
+def build_multi_die(n_dies: int = 2, nx: int = 4, ny: int = 4,
+                    d2d: int = 3) -> Topology:
+    """``n_dies`` nx x ny mesh dies stitched along X into one fabric.
+
+    Each boundary row link runs through ``d2d`` repeater nodes (1-in/1-out
+    passthrough routers, exactly like Occamy's spill-register chains), so a
+    die crossing costs ``d2d`` extra router traversals. Tiles are numbered
+    row-major over the *global* (n_dies*nx, ny) grid, and routing is global
+    XY, so ring/2-D collective schedules map onto the stitched fabric
+    unchanged — boundary crossings are priced by ``Topology.hops``.
+    """
+    NX = n_dies * nx
+    R0 = NX * ny  # die routers, global row-major ids
+    P = 5
+    rid = lambda gx, y: y * NX + gx
+
+    links: list[tuple[int, int, int, int]] = []  # (r1, p1, r2, p2) bidirectional
+    routers = R0
+    repeaters: list[int] = []
+    rep_east_x: dict[int, int] = {}  # repeater -> first global column east of it
+
+    for y in range(ny):
+        for gx in range(NX):
+            r = rid(gx, y)
+            if y + 1 < ny:
+                links.append((r, N, rid(gx, y + 1), S))
+            if gx + 1 < NX and (gx + 1) % nx != 0:  # same-die east neighbour
+                links.append((r, E, rid(gx + 1, y), W))
+    for d in range(1, n_dies):
+        bx = d * nx  # first column of die d
+        for y in range(ny):
+            prev, pp = rid(bx - 1, y), E
+            chain = list(range(routers, routers + d2d))
+            routers += d2d
+            repeaters.extend(chain)
+            for c in chain:
+                rep_east_x[c] = bx
+                links.append((prev, pp, c, 0))
+                prev, pp = c, 1
+            links.append((prev, pp, rid(bx, y), W))
+
+    link_to = np.full((routers, P, 2), -1, np.int32)
+    for r1, p1, r2, p2 in links:
+        link_to[r1, p1] = (r2, p2)
+        link_to[r2, p2] = (r1, p1)
+
+    eps = [(rid(gx, y), L) for y in range(ny) for gx in range(NX)]
+    ep_attach = np.array(eps, np.int32)
+    Etot = len(eps)
+    tile_coord = np.zeros((Etot, 2), np.int32)
+    for e, (r, p) in enumerate(eps):
+        tile_coord[e] = (r % NX, r // NX)
+
+    route = np.full((routers, Etot), -1, np.int32)
+    for r in range(R0):
+        x, y = r % NX, r // NX
+        for e in range(Etot):
+            er, ep_port = eps[e]
+            ex, ey = er % NX, er // NX
+            if (x, y) == (ex, ey):
+                route[r, e] = ep_port
+            elif x != ex:
+                route[r, e] = E if ex > x else W  # E/W may lead into a chain
+            else:
+                route[r, e] = N if ey > y else S
+    # repeater routing: port 0 faces west, port 1 faces east; only X-phase
+    # traffic crosses a chain, so the destination column decides the side
+    for rep in repeaters:
+        bx = rep_east_x[rep]
+        for e, (er, _) in enumerate(eps):
+            route[rep, e] = 1 if er % NX >= bx else 0
+    return Topology(
+        n_routers=routers, n_ports=P, n_endpoints=Etot, link_to=link_to,
+        ep_attach=ep_attach, route=route, name=f"multi_die{n_dies}x{nx}x{ny}",
+        tile_coord=tile_coord,
+        meta={"nx": NX, "ny": ny, "n_tiles": Etot, "n_hbm": 0,
+              "n_dies": n_dies, "die_nx": nx, "d2d": d2d,
+              "repeaters": repeaters},
+    )
+
+
+def die_of(topo: Topology, tile: int) -> int:
+    """Die index of a tile on a multi-die fabric (column / die width)."""
+    return int(topo.tile_coord[tile, 0]) // topo.meta["die_nx"]
+
+
+def multi_die_crossings(topo: Topology, src_ep: int, dst_ep: int) -> int:
+    """Die-to-die boundary chains an XY route between two tiles crosses."""
+    return abs(die_of(topo, src_ep) - die_of(topo, dst_ep))
 
 
 # ----------------------------------------------------------------------
@@ -200,7 +389,22 @@ def build_occamy(n_groups: int = 6, clusters_per_group: int = 4, n_hbm: int = 8,
         ep_attach=ep_attach, route=route, name="occamy",
         meta={
             "n_groups": n_groups, "clusters_per_group": clusters_per_group,
-            "n_clusters": n_clusters, "n_hbm": n_hbm, "spill": spill,
-            "repeaters": repeaters,
+            "n_clusters": n_clusters, "n_tiles": n_clusters, "n_hbm": n_hbm,
+            "spill": spill, "repeaters": repeaters,
         },
     )
+
+
+# ----------------------------------------------------------------------
+# factory
+# ----------------------------------------------------------------------
+TOPOLOGIES = ["mesh", "torus", "multi_die", "occamy"]
+
+
+def build_topology(name: str, **kw) -> Topology:
+    """Build a topology by name (the ``--topology`` axis of the sweeps)."""
+    builders = {"mesh": build_mesh, "torus": build_torus,
+                "multi_die": build_multi_die, "occamy": build_occamy}
+    if name not in builders:
+        raise ValueError(f"unknown topology {name!r}; choose from {TOPOLOGIES}")
+    return builders[name](**kw)

@@ -45,6 +45,10 @@ def pattern_dst(topo: Topology, pattern: str, seed: int = 7) -> np.ndarray:
         return perm.astype(np.int32)
     if pattern == "tiled-matmul":
         # reads stream from the row's HBM channel (A/B tiles), few writes back
+        if topo.meta.get("n_hbm", 0) == 0:
+            raise ValueError(
+                "tiled-matmul needs HBM endpoints; "
+                f"topology {topo.name!r} has none")
         return (nt + y).astype(np.int32)  # HBM endpoint of this row
     raise ValueError(pattern)
 

@@ -1,0 +1,182 @@
+"""Regression tests for three latent fabric bugs (each fails on the
+pre-fix code):
+
+1. RoB-mode credit accounting retired ``wl.dma_beats`` for every wide
+   completion even when a scheduled workload carries per-step
+   ``dma_beats_seq`` — leaking/over-freeing credits on collectives with
+   non-uniform chunk sizes. Responses now echo the issued burst size
+   (F_META), so retirement credits exactly what was issued.
+2. ``run_sweep`` derived the swept-field list from the reference workload
+   only, silently ignoring array fields that only batch members set.
+3. ``_ingest`` pushed narrow responses into the CH_RSP egress queue with
+   no space check; on overflow ``_eg_push`` clipped the slot index and
+   silently overwrote the newest entry (a lost flit). Req-channel
+   delivery now stalls while the rsp egress queue is full
+   (memory-server-style backpressure) and ``stats()['eg_overflow']``
+   counts the prevented overflows.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.noc import collective_traffic as CT
+from repro.core.noc import endpoints as epm
+from repro.core.noc import sim as S
+from repro.core.noc import traffic as T
+from repro.core.noc.params import NocParams
+from repro.core.noc.topology import build_mesh
+
+
+# ----------------------------------------------------------------------
+# 1. RoB credit accounting with mixed-size scheduled steps
+# ----------------------------------------------------------------------
+def _mixed_ring_schedule(topo, beats=(8, 2)):
+    """Ring all-gather whose steps alternate between burst sizes."""
+    sched = CT.build(topo, "all-gather", data_kb=4)
+    bts = sched.beats_seq.copy()
+    K = bts.shape[-1]
+    sizes = np.asarray([beats[k % len(beats)] for k in range(K)], np.int32)
+    bts[bts > 0] = 0
+    bts[sched.dst_seq >= 0] = np.broadcast_to(
+        sizes, sched.dst_seq.shape)[sched.dst_seq >= 0]
+    return dataclasses.replace(sched, beats_seq=bts)
+
+
+def test_rob_credits_balance_with_mixed_size_scheduled_writes():
+    """After a mixed-size scheduled collective drains, every endpoint's
+    RoB credit must return exactly to its initial value. Pre-fix, each
+    retirement credited the scalar wl.dma_beats (the max), so small
+    bursts over-freed credits and the pool ended above rob_beats."""
+    topo = build_mesh(nx=2, ny=2, hbm_west=False)
+    params = NocParams(ni_order="rob")
+    sched = _mixed_ring_schedule(topo)
+    assert len(np.unique(sched.beats_seq[sched.dst_seq >= 0])) > 1
+    wl = CT.to_workload(topo, sched)
+    sim = S.build_sim(topo, params, wl)
+    st = S.run(sim, 600)
+    out = S.stats(sim, st)
+    np.testing.assert_array_equal(out["rx_bursts"], sched.expect_rx)
+    assert int(np.asarray(st.eps.d_txns_left).sum()) == 0  # fully drained
+    np.testing.assert_array_equal(
+        np.asarray(st.eps.rob_credit),
+        np.full((topo.n_endpoints,), params.rob_beats, np.int32))
+
+
+def test_rob_credits_balance_with_mixed_size_scheduled_reads():
+    """Same property on the read path: WIDE_R responses carry the issued
+    burst size back to the requester."""
+    topo = build_mesh(nx=2, ny=2, hbm_west=False)
+    params = NocParams(ni_order="rob")
+    E = topo.n_endpoints
+    K = 4
+    dst = np.full((E, 1, K), -1, np.int32)
+    bts = np.zeros((E, 1, K), np.int32)
+    for e in range(4):
+        dst[e, 0] = (e + 1) % 4
+        bts[e, 0] = [8, 2, 8, 2]
+    wl = epm.idle_workload(E, n_tiles=4)
+    txns = np.zeros((E, 1), np.int32)
+    txns[:4] = K
+    wl = dataclasses.replace(
+        wl, dma_txns=txns, dma_beats=8, dma_write=False,
+        dma_dst_seq=dst, dma_gate=np.zeros((E, 1, K), np.int32),
+        dma_beats_seq=bts)
+    sim = S.build_sim(topo, params, wl)
+    st = S.run(sim, 600)
+    assert int(np.asarray(st.eps.d_txns_left).sum()) == 0
+    assert int(np.asarray(st.eps.d_done).sum()) == 4 * K
+    np.testing.assert_array_equal(
+        np.asarray(st.eps.rob_credit),
+        np.full((E,), params.rob_beats, np.int32))
+
+
+def test_robless_collective_unaffected_by_meta_plumbing():
+    """The golden-pinned robless datapath must not shift: META now carries
+    burst sizes, but robless retirement ignores beats entirely."""
+    topo = build_mesh(nx=4, ny=4)
+    sched = CT.build(topo, "all-reduce", data_kb=4, streams=2)
+    wl = CT.to_workload(topo, sched)
+    sim = S.build_sim(topo, NocParams(), wl)
+    out = S.stats(sim, S.run(sim, 900))
+    assert CT.measured_cycles(out, topo) == 190  # same pin as the golden test
+
+
+# ----------------------------------------------------------------------
+# 2. run_sweep field-presence validation
+# ----------------------------------------------------------------------
+def test_run_sweep_rejects_fields_the_reference_lacks():
+    """A field set only on batch members would be silently dropped (the
+    swept-field list comes from sim.wl): must raise instead."""
+    topo = build_mesh(nx=4, ny=2)
+    base = T.dma_workload(topo, "uniform", transfer_kb=1, n_txns=2)
+    ref = dataclasses.replace(base, dma_alt_dst=None)
+    member = dataclasses.replace(
+        base, dma_alt_dst=np.full_like(base.dma_dst, 1))
+    sim = S.build_sim(topo, NocParams(), ref)
+    with pytest.raises(ValueError, match="dma_alt_dst"):
+        S.run_sweep(sim, [ref, member], 50)
+
+
+def test_run_sweep_rejects_fields_only_the_reference_has():
+    topo = build_mesh(nx=4, ny=2)
+    base = T.dma_workload(topo, "uniform", transfer_kb=1, n_txns=2)
+    member = dataclasses.replace(base, narrow_rate=None)
+    sim = S.build_sim(topo, NocParams(), base)
+    with pytest.raises(ValueError, match="narrow_rate"):
+        S.run_sweep(sim, [base, member], 50)
+
+
+# ----------------------------------------------------------------------
+# 3. rsp egress overflow guard
+# ----------------------------------------------------------------------
+def _hot_spot_sim(params):
+    """Three tiles fire narrow requests at tile 0 as fast as they can:
+    deliveries arrive back-to-back while each response sits in tile 0's
+    CH_RSP egress queue for ~5 cycles of NI/memory latency, so a depth-2
+    queue must refuse pushes. Pre-fix the push clipped onto the newest
+    entry and the flit was lost."""
+    topo = build_mesh(nx=2, ny=2, hbm_west=False)
+    E = topo.n_endpoints
+    nr = np.zeros((E,), np.float32)
+    nd = np.full((E,), -1, np.int32)
+    nr[1:4] = 1.0
+    nd[1:4] = 0
+    wl = dataclasses.replace(epm.idle_workload(E, n_tiles=4),
+                             narrow_rate=nr, narrow_dst=nd)
+    return topo, wl, S.build_sim(topo, params, wl)
+
+
+def test_rsp_egress_overflow_stalls_instead_of_corrupting():
+    params = NocParams(egress_depth=2)
+    topo, wl, sim = _hot_spot_sim(params)
+    st = S.run(sim, 300)
+    # drain: stop generating and run until quiescent
+    wl2 = dataclasses.replace(wl, narrow_rate=np.zeros_like(wl.narrow_rate))
+    sim2 = S.build_sim(topo, params, wl2)
+    st2 = S.run(sim2, 600, state=st)
+    out = S.stats(sim2, st2)
+    # the adversarial condition actually occurred...
+    assert out["eg_overflow"][0] > 0, "hot spot never filled the rsp queue"
+    # ...and not a single flit was lost: every request got exactly one
+    # response (pre-fix, overwritten responses leave lat_cnt short)
+    sent = int(np.asarray(st2.eps.n_sent).sum())
+    assert sent > 0
+    assert int(out["narrow_lat_cnt"].sum()) == sent
+    assert int(np.asarray(st2.eps.ni_cnt).sum()) == 0  # all retired
+    assert int(np.asarray(st2.fabric.in_cnt).sum()) == 0
+    assert int(np.asarray(st2.fabric.out_cnt).sum()) == 0
+
+
+def test_egress_queues_never_exceed_capacity():
+    """Occupancy invariant under the hot spot: eg_cnt stays <= depth on
+    every (channel, endpoint) queue, every cycle (pre-fix it reached
+    depth + 1 while overwriting the newest entry)."""
+    params = NocParams(egress_depth=2)
+    _, _, sim = _hot_spot_sim(params)
+    st = sim.init_state()
+    step = jax.jit(sim.step)
+    for _ in range(120):
+        st, _ = step(st)
+        assert int(np.asarray(st.eps.eg_cnt).max()) <= params.egress_depth

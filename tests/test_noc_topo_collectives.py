@@ -1,0 +1,218 @@
+"""Collectives on the topology zoo: the full suite (all-gather /
+reduce-scatter / ring + 2-D all-reduce) runs cycle-accurately on torus and
+multi-die fabrics, the per-topology analytical model matches measured
+completion cycles (exact on 1-D torus rings, <=10% on multi-die), torus
+wrap links remove the ring turnaround penalty, and run_sweep on the new
+topologies stays bit-identical to sequential per-config runs."""
+import numpy as np
+import pytest
+
+from repro.core.noc import collective_traffic as CT
+from repro.core.noc import sim as S
+from repro.core.noc import traffic as T
+from repro.core.noc.params import NocParams
+from repro.core.noc.topology import (
+    build_mesh,
+    build_multi_die,
+    build_occamy,
+    build_torus,
+)
+
+
+def _run_collective(topo, sched, n_cycles):
+    wl = CT.to_workload(topo, sched)
+    sim = S.build_sim(topo, NocParams(), wl)
+    st = S.run(sim, n_cycles)
+    return sim, st, S.stats(sim, st)
+
+
+# ----------------------------------------------------------------------
+# torus: 1-D rings are exact, 2-D stays within the suite-wide bar
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name,kw,n_cycles", [
+    ("all-gather", dict(data_kb=16), 700),
+    ("reduce-scatter", dict(data_kb=16), 700),
+    ("all-reduce", dict(data_kb=16), 1100),
+    ("all-reduce", dict(data_kb=16, streams=2), 900),
+])
+def test_torus_1d_ring_collectives_match_model_exactly(name, kw, n_cycles):
+    """On a torus the snake ring closes through a wrap link, so every edge
+    is a unit hop and the calibrated model is cycle-exact."""
+    topo = build_torus(nx=4, ny=4)
+    sched = CT.build(topo, name, **kw)
+    # no long wrap edge: all ring edges are 2 router traversals
+    assert (CT._ring_hops(topo, CT.ring_order(topo)) == 2).all()
+    _, st, out = _run_collective(topo, sched, n_cycles)
+    np.testing.assert_array_equal(out["rx_bursts"], sched.expect_rx)
+    meas = CT.measured_cycles(out, topo)
+    est = CT.analytical_cycles(sched, NocParams(), topo)
+    assert est == meas, f"{name} on torus: measured {meas} vs model {est}"
+
+
+def test_1d_torus_ring_all_gather_exact_on_wrap_ring():
+    """True 1-D torus (ny=1): the snake ring IS the wrap ring, every edge a
+    single link — model exact, including the degenerate 2-D schedule whose
+    column phase has zero steps."""
+    topo = build_torus(nx=8, ny=1)
+    p = NocParams()
+    sched = CT.build(topo, "all-gather", data_kb=8)
+    _, st, out = _run_collective(topo, sched, 600)
+    np.testing.assert_array_equal(out["rx_bursts"], sched.expect_rx)
+    assert CT.analytical_cycles(sched, p, topo) == CT.measured_cycles(out, topo)
+    # zero-step column phase must price as 0, not crash (paths [n, 0])
+    sched2d = CT.build(topo, "all-reduce-2d", data_kb=8)
+    assert np.isfinite(CT.analytical_cycles(sched2d, p, topo))
+
+
+def test_torus_2d_all_reduce_delivers_and_tracks_model():
+    topo = build_torus(nx=4, ny=4)
+    sched = CT.build(topo, "all-reduce-2d", data_kb=16)
+    _, st, out = _run_collective(topo, sched, 1500)
+    np.testing.assert_array_equal(out["rx_bursts"], sched.expect_rx)
+    meas = CT.measured_cycles(out, topo)
+    est = CT.analytical_cycles(sched, NocParams(), topo)
+    assert abs(est - meas) <= 0.10 * meas, f"measured {meas} vs model {est}"
+
+
+def test_torus_ring_has_no_turnaround_penalty():
+    """Same tiles, same data: the torus ring all-reduce finishes faster
+    than the mesh one because the wrap edge is a single hop instead of a
+    full column walk — and the models predict exactly that gap."""
+    p = NocParams()
+    done = {}
+    for topo in (build_mesh(nx=4, ny=4), build_torus(nx=4, ny=4)):
+        sched = CT.build(topo, "all-reduce", data_kb=16)
+        _, st, out = _run_collective(topo, sched, 1100)
+        np.testing.assert_array_equal(out["rx_bursts"], sched.expect_rx)
+        done[topo.name] = CT.measured_cycles(out, topo)
+    assert done["torus4x4"] < done["mesh4x4"], done
+    est_mesh = CT.analytical_cycles(
+        CT.build(build_mesh(nx=4, ny=4), "all-reduce", data_kb=16), p)
+    est_torus = CT.analytical_cycles(
+        CT.build(build_torus(nx=4, ny=4), "all-reduce", data_kb=16), p,
+        build_torus(nx=4, ny=4))
+    assert est_torus < est_mesh
+
+
+# ----------------------------------------------------------------------
+# multi-die: rings cross the boundary repeater chains
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name,kw,n_cycles", [
+    ("all-gather", dict(data_kb=16), 1000),
+    ("reduce-scatter", dict(data_kb=16), 1000),
+    ("all-reduce", dict(data_kb=16), 1800),
+    ("all-reduce", dict(data_kb=16, streams=2), 1500),
+])
+def test_multi_die_ring_collectives_within_10pct(name, kw, n_cycles):
+    topo = build_multi_die(n_dies=2, nx=2, ny=4, d2d=3)
+    sched = CT.build(topo, name, **kw)
+    # the snake ring crosses the die boundary: some edges carry the chain
+    hops = CT._ring_hops(topo, CT.ring_order(topo))
+    assert hops.max() >= 2 + topo.meta["d2d"]
+    _, st, out = _run_collective(topo, sched, n_cycles)
+    np.testing.assert_array_equal(out["rx_bursts"], sched.expect_rx)
+    meas = CT.measured_cycles(out, topo)
+    est = CT.analytical_cycles(sched, NocParams(), topo)
+    assert abs(est - meas) <= 0.10 * meas, \
+        f"{name} on multi-die: measured {meas} vs model {est}"
+
+
+def test_multi_die_2d_all_reduce_delivers():
+    topo = build_multi_die(n_dies=2, nx=2, ny=4, d2d=3)
+    sched = CT.build(topo, "all-reduce-2d", data_kb=16)
+    _, st, out = _run_collective(topo, sched, 2500)
+    np.testing.assert_array_equal(out["rx_bursts"], sched.expect_rx)
+    meas = CT.measured_cycles(out, topo)
+    est = CT.analytical_cycles(sched, NocParams(), topo)
+    assert abs(est - meas) <= 0.15 * meas, f"measured {meas} vs model {est}"
+
+
+def test_multi_die_fabric_drains():
+    """Cross-die all-reduce leaves nothing in flight (incl. repeaters)."""
+    topo = build_multi_die(n_dies=2, nx=2, ny=4, d2d=3)
+    sched = CT.build(topo, "all-reduce", data_kb=4)
+    _, st, _ = _run_collective(topo, sched, 1200)
+    assert int(np.asarray(st.eps.d_txns_left).sum()) == 0
+    assert int(np.asarray(st.fabric.in_cnt).sum()) == 0
+    assert int(np.asarray(st.fabric.out_cnt).sum()) == 0
+
+
+# ----------------------------------------------------------------------
+# occamy: ring collectives over the cluster order thread the Xbars
+# ----------------------------------------------------------------------
+def test_occamy_ring_all_reduce_runs_on_hierarchy():
+    topo = build_occamy()
+    sched = CT.build(topo, "all-reduce", data_kb=8)
+    # coordinate-free fabric: ring order falls back to endpoint order and
+    # cross-group edges pay the spill-register chains
+    hops = CT._ring_hops(topo, CT.ring_order(topo))
+    assert hops.min() == 1 and hops.max() == 1 + 2 * (1 + topo.meta["spill"])
+    _, st, out = _run_collective(topo, sched, 4000)
+    np.testing.assert_array_equal(out["rx_bursts"], sched.expect_rx)
+    meas = CT.measured_cycles(out, topo)
+    est = CT.analytical_cycles(sched, NocParams(), topo)
+    assert abs(est - meas) <= 0.15 * meas, f"measured {meas} vs model {est}"
+
+
+# ----------------------------------------------------------------------
+# per-topology model terms
+# ----------------------------------------------------------------------
+def test_for_topology_defaults_and_meta_override():
+    """for_topology returns the calibrated defaults for every zoo builder
+    (all traversals are the same 2-stage router) and honors a topology
+    whose meta declares different link terms."""
+    from repro.core.collectives import FabricCollectiveModel
+
+    p = NocParams()
+    base = FabricCollectiveModel.from_noc_params(p)
+    topo = build_torus(nx=4, ny=4)
+    assert FabricCollectiveModel.for_topology(topo, p) == base
+    slow = dataclasses_replace_meta(topo, hop_cycles=3.5)
+    m = FabricCollectiveModel.for_topology(slow, p)
+    assert m.hop_cycles == 3.5 and m.rt_cycles == base.rt_cycles
+    # the override flows through analytical_cycles(..., topo=...)
+    sched = CT.build(topo, "all-gather", data_kb=8)
+    assert (CT.analytical_cycles(sched, p, slow)
+            > CT.analytical_cycles(sched, p, topo))
+
+
+def dataclasses_replace_meta(topo, **meta_kw):
+    import dataclasses
+    return dataclasses.replace(topo, meta={**topo.meta, **meta_kw})
+
+
+# ----------------------------------------------------------------------
+# run_sweep on the new topologies: pure batching transform
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("mk", [
+    lambda: build_torus(nx=4, ny=2),
+    lambda: build_multi_die(n_dies=2, nx=2, ny=2, d2d=2),
+])
+def test_run_sweep_bit_identical_on_new_topologies(mk):
+    topo = mk()
+    params = NocParams()
+    wls = [T.dma_workload(topo, p, transfer_kb=1, n_txns=2)
+           for p in ("uniform", "neighbor", "bit-complement")]
+    sim0 = S.build_sim(topo, params, wls[0])
+    swept = S.run_sweep(sim0, wls, 400)
+    for wl, st in zip(wls, swept):
+        sim = S.build_sim(topo, params, wl)
+        ref = S.stats(sim, S.run(sim, 400))
+        got = S.stats(sim0, st)
+        for k in ("beats_rcvd", "dma_done", "last_rx", "first_rx",
+                  "ni_stalls", "narrow_lat_cnt"):
+            np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+
+
+def test_sweep_batches_torus_collective_schedules():
+    topo = build_torus(nx=4, ny=2)
+    params = NocParams()
+    scheds = [CT.build(topo, "all-gather", data_kb=kb) for kb in (2, 4)]
+    wls = [CT.to_workload(topo, sc) for sc in scheds]
+    sim = S.build_sim(topo, params, wls[0])
+    for sc, st in zip(scheds, S.run_sweep(sim, wls, 500)):
+        out = S.stats(sim, st)
+        np.testing.assert_array_equal(out["rx_bursts"], sc.expect_rx)
+        meas = CT.measured_cycles(out, topo)
+        est = CT.analytical_cycles(sc, params, topo)
+        assert est == meas  # torus rings: cycle-exact

@@ -1,0 +1,238 @@
+"""Topology zoo invariants: every builder's routing tables stay on-fabric
+and terminate, hops() is symmetric, torus wrap links beat the mesh's
+worst case, multi-die boundary crossings are priced correctly, express
+links shorten long routes, and the generalized mesh builder is
+bit-identical to the classic radix-5 one at express=0."""
+import numpy as np
+import pytest
+
+from repro.core.noc.topology import (
+    L,
+    N,
+    E,
+    S,
+    W,
+    TOPOLOGIES,
+    build_mesh,
+    build_multi_die,
+    build_occamy,
+    build_topology,
+    build_torus,
+    multi_die_crossings,
+)
+
+BUILDERS = {
+    "mesh": lambda: build_mesh(nx=4, ny=4),
+    "mesh_express": lambda: build_mesh(nx=8, ny=2, hbm_west=False, express=2),
+    "torus": lambda: build_torus(nx=4, ny=4),
+    "torus_1d": lambda: build_torus(nx=8, ny=1),
+    "multi_die": lambda: build_multi_die(n_dies=2, nx=2, ny=4, d2d=3),
+    "multi_die_3": lambda: build_multi_die(n_dies=3, nx=2, ny=2, d2d=2),
+    "occamy": lambda: build_occamy(),
+}
+
+
+# ----------------------------------------------------------------------
+# golden equivalence: the generalized (arbitrary-radix) mesh builder at
+# express=0 must reproduce the classic radix-5 mesh bit-for-bit
+# ----------------------------------------------------------------------
+def _legacy_mesh(nx, ny, hbm_west=True):
+    """Reference copy of the pre-zoo radix-5 mesh builder."""
+    R, P = nx * ny, 5
+    rid = lambda x, y: y * nx + x
+    link_to = np.full((R, P, 2), -1, np.int32)
+    for y in range(ny):
+        for x in range(nx):
+            r = rid(x, y)
+            if y + 1 < ny:
+                link_to[r, N] = (rid(x, y + 1), S)
+            if y > 0:
+                link_to[r, S] = (rid(x, y - 1), N)
+            if x + 1 < nx:
+                link_to[r, E] = (rid(x + 1, y), W)
+            if x > 0:
+                link_to[r, W] = (rid(x - 1, y), E)
+    eps = [(rid(x, y), L) for y in range(ny) for x in range(nx)]
+    n_tiles = len(eps)
+    if hbm_west:
+        eps += [(rid(0, y), W) for y in range(ny)]
+    Etot = len(eps)
+    route = np.full((R, Etot), -1, np.int32)
+    for r in range(R):
+        x, y = r % nx, r // nx
+        for e in range(Etot):
+            er, ep_port = eps[e]
+            ex, ey = er % nx, er // nx
+            if e >= n_tiles and hbm_west:
+                if (x, y) == (0, ey):
+                    route[r, e] = W
+                    continue
+                ex = 0
+            if (x, y) == (ex, ey):
+                route[r, e] = ep_port if e < n_tiles else W
+            elif x != ex:
+                route[r, e] = E if ex > x else W
+            else:
+                route[r, e] = N if ey > y else S
+    return link_to, np.array(eps, np.int32), route
+
+
+@pytest.mark.parametrize("nx,ny,hbm", [(4, 8, True), (4, 4, True),
+                                       (3, 5, False), (4, 2, True)])
+def test_generalized_mesh_bit_identical_to_legacy(nx, ny, hbm):
+    link_to, ep_attach, route = _legacy_mesh(nx, ny, hbm)
+    t = build_mesh(nx=nx, ny=ny, hbm_west=hbm)
+    np.testing.assert_array_equal(t.link_to, link_to)
+    np.testing.assert_array_equal(t.ep_attach, ep_attach)
+    np.testing.assert_array_equal(t.route, route)
+    assert t.n_ports == 5
+    assert t.meta["n_tiles"] == nx * ny
+    assert t.meta["n_hbm"] == (ny if hbm else 0)
+
+
+# ----------------------------------------------------------------------
+# every builder: tables stay on-fabric, walks terminate, hops symmetric
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(BUILDERS))
+def test_route_tables_never_lead_off_fabric(name):
+    t = BUILDERS[name]()
+    port_ep = t.port_ep
+    for r in range(t.n_routers):
+        for e in range(t.n_endpoints):
+            p = t.route[r, e]
+            assert 0 <= p < t.n_ports, f"{name}: no route at ({r}, {e})"
+            # the chosen port either exits to a link or delivers to e itself
+            assert t.link_to[r, p, 0] >= 0 or port_ep[r, p] == e, \
+                f"{name}: route ({r}, {e}) -> port {p} leads off fabric"
+
+
+@pytest.mark.parametrize("name", sorted(BUILDERS))
+def test_hops_symmetric_and_in_range(name):
+    t = BUILDERS[name]()
+    nt = t.meta["n_tiles"]
+    pairs = [(a, b) for a in range(0, nt, max(nt // 6, 1))
+             for b in range(1, nt, max(nt // 5, 1)) if a != b]
+    for a, b in pairs:
+        h_ab = t.hops(a, b)  # terminates: hops() asserts no routing loop
+        h_ba = t.hops(b, a)
+        assert h_ab == h_ba, f"{name}: hops({a},{b})={h_ab} != {h_ba}"
+        assert 1 <= h_ab <= t.n_routers
+
+
+def test_every_endpoint_reachable_from_every_tile():
+    """Full reachability walk on the denser shapes (includes HBM targets)."""
+    for t in (build_mesh(nx=4, ny=4), build_torus(nx=4, ny=4),
+              build_multi_die(n_dies=2, nx=2, ny=4)):
+        for a in range(t.meta["n_tiles"]):
+            for b in range(t.n_endpoints):
+                if a != b:
+                    assert t.hops(a, b) >= 1
+
+
+# ----------------------------------------------------------------------
+# torus
+# ----------------------------------------------------------------------
+def test_torus_wrap_reduces_worst_case_hops():
+    torus, mesh = build_torus(nx=4, ny=4), build_mesh(nx=4, ny=4)
+    nt = 16
+    worst = lambda t: max(t.hops(a, b) for a in range(nt)
+                          for b in range(nt) if a != b)
+    wt, wm = worst(torus), worst(mesh)
+    # shortest-direction wrap: radius nx/2 + ny/2 instead of (nx-1) + (ny-1)
+    assert wt == 4 // 2 + 4 // 2 + 1
+    assert wm == (4 - 1) + (4 - 1) + 1
+    assert wt < wm
+
+
+def test_torus_hops_match_wrap_aware_manhattan():
+    t = build_torus(nx=4, ny=4)
+    nx, ny = 4, 4
+    for a in range(16):
+        for b in range(16):
+            if a == b:
+                continue
+            ax, ay, bx, by = a % nx, a // nx, b % nx, b // nx
+            dx = min((bx - ax) % nx, (ax - bx) % nx)
+            dy = min((by - ay) % ny, (ay - by) % ny)
+            assert t.hops(a, b) == dx + dy + 1
+
+
+def test_torus_1d_ring_edges_are_all_unit():
+    t = build_torus(nx=8, ny=1)
+    for i in range(8):
+        assert t.hops(i, (i + 1) % 8) == 2  # incl. the wrap edge
+
+
+# ----------------------------------------------------------------------
+# multi-die
+# ----------------------------------------------------------------------
+def test_multi_die_boundary_crossings_counted_correctly():
+    d2d = 3
+    t = build_multi_die(n_dies=2, nx=2, ny=4, d2d=d2d)
+    for a in range(t.meta["n_tiles"]):
+        for b in range(t.meta["n_tiles"]):
+            if a == b:
+                continue
+            manh = int(np.abs(t.tile_coord[a] - t.tile_coord[b]).sum())
+            cross = multi_die_crossings(t, a, b)
+            assert t.hops(a, b) == manh + 1 + d2d * cross, (a, b)
+
+
+def test_multi_die_three_dies_cross_twice():
+    d2d = 2
+    t = build_multi_die(n_dies=3, nx=2, ny=2, d2d=d2d)
+    # west-most to east-most tile on the same row: crosses 2 boundaries
+    a, b = 0, t.meta["nx"] - 1
+    assert multi_die_crossings(t, a, b) == 2
+    manh = int(np.abs(t.tile_coord[a] - t.tile_coord[b]).sum())
+    assert t.hops(a, b) == manh + 1 + 2 * d2d
+
+
+def test_multi_die_same_die_routes_avoid_repeaters():
+    t = build_multi_die(n_dies=2, nx=2, ny=4, d2d=3)
+    # tiles 0 and 1 are both in die 0: plain mesh distance
+    assert multi_die_crossings(t, 0, 1) == 0
+    assert t.hops(0, 1) == 2
+
+
+# ----------------------------------------------------------------------
+# express (arbitrary-radix) mesh
+# ----------------------------------------------------------------------
+def test_express_links_shorten_long_routes():
+    plain = build_mesh(nx=8, ny=2, hbm_west=False)
+    expr = build_mesh(nx=8, ny=2, hbm_west=False, express=2)
+    assert expr.n_ports == 9
+    # 0 -> 7 along a row: 0 -2-> 2 -2-> 4 -2-> 6 -1-> 7 = 5 routers vs 8
+    assert plain.hops(0, 7) == 8
+    assert expr.hops(0, 7) == 5
+    # short routes are untouched
+    assert expr.hops(0, 1) == plain.hops(0, 1) == 2
+
+
+def test_express_mesh_preserves_dimension_order():
+    expr = build_mesh(nx=8, ny=2, hbm_west=False, express=2)
+    # X is always exhausted before Y: from tile 0 toward tile 15 (x=7, y=1)
+    # the first hops are all eastbound (ports E=1 or XE=5)
+    r = 0
+    for _ in range(4):
+        p = expr.route[r, 15]
+        assert p in (1, 5), f"Y-hop before X exhausted (port {p})"
+        r = expr.link_to[r, p, 0]
+
+
+# ----------------------------------------------------------------------
+# factory
+# ----------------------------------------------------------------------
+def test_build_topology_factory():
+    assert build_topology("mesh", nx=4, ny=2).name == "mesh4x2"
+    assert build_topology("torus", nx=4, ny=2).name == "torus4x2"
+    assert build_topology("multi_die", n_dies=2, nx=2, ny=2).name == "multi_die2x2x2"
+    assert build_topology("occamy").name == "occamy"
+    assert set(TOPOLOGIES) == {"mesh", "torus", "multi_die", "occamy"}
+    with pytest.raises(ValueError):
+        build_topology("hypercube")
+
+
+def test_occamy_meta_exposes_tiles():
+    occ = build_occamy()
+    assert occ.meta["n_tiles"] == occ.meta["n_clusters"] == 24
