@@ -26,6 +26,9 @@ def main() -> None:
                     help="toy scale, fail on exceptions only")
     ap.add_argument("--json", default=None, help="write rows to this JSON file")
     ap.add_argument("--only", default=None, help="substring filter on module name")
+    ap.add_argument("--backend", default=None, choices=("jnp", "pallas"),
+                    help="router-cycle compute backend axis (modules that "
+                         "support it add per-backend rows)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -62,10 +65,16 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         kwargs = {"full": args.full}
-        if args.smoke and "smoke" in inspect.signature(mod.bench).parameters:
+        params = inspect.signature(mod.bench).parameters
+        if args.smoke and "smoke" in params:
             kwargs["smoke"] = True
+        if args.backend and "backend" in params:
+            kwargs["backend"] = args.backend
+        # effective backend per row: modules without a backend kwarg always
+        # run jnp, whatever --backend asked for
+        row_backend = kwargs.get("backend") or "jnp"
         for r in mod.bench(**kwargs):
-            all_rows.append({"module": name, **r})
+            all_rows.append({"module": name, "backend": row_backend, **r})
             tgt = "" if r["target"] is None else r["target"]
             ok = "" if r["ok"] is None else r["ok"]
             print(f"{r['name']},{r['us_per_call']},{r['derived']},{tgt},{ok}", flush=True)
@@ -76,7 +85,9 @@ def main() -> None:
                     failed.append(r["name"])
     if args.json:
         with open(args.json, "w") as f:
+            # requested axis; each row carries its *effective* backend
             json.dump({"smoke": args.smoke, "full": args.full,
+                       "backend": args.backend or "jnp",
                        "rows": all_rows}, f, indent=1, default=str)
     print(f"\n# paper-validation: {n_ok}/{n_checked} targets matched", flush=True)
     if failed:

@@ -4,6 +4,13 @@ the vmapped multi-config sweep engine vs a sequential build+run loop.
 
 Pre-refactor baseline (per-channel FabricState list, dict-of-arrays flits,
 same host): compile+first-run 5.5 s, steady state ~1400 cycles/s.
+
+The ``--backend`` axis compares the per-cycle router compute backends
+(``jnp`` vmapped reference vs the ``pallas`` (C, R)-gridded kernel,
+interpret mode off TPU) on the same workload: cycles/s for both, plus a
+bit-equivalence check on the delivered-beat counters. Standalone usage::
+
+    PYTHONPATH=src python -m benchmarks.sim_throughput --smoke --backend pallas
 """
 from __future__ import annotations
 
@@ -73,7 +80,40 @@ def _sweep_speedup(n_configs: int, n_cycles: int):
     return t_seq, t_sweep, len(wls)
 
 
-def bench(full: bool = False, smoke: bool = False) -> list[dict]:
+def _backend_rows(n_cycles: int) -> list[dict]:
+    """cycles/s of both router backends on one workload + bit-equivalence.
+
+    Small 4x2 mesh: the pallas backend runs interpret-mode off TPU (the
+    grid becomes a scanned loop), so it trades simulated throughput for
+    exercising the exact kernel dataflow — CI pins its equivalence here.
+    """
+    topo = build_mesh(nx=4, ny=2)
+    wl = T.dma_workload(topo, "uniform", transfer_kb=1, n_txns=2)
+    rows, done = [], {}
+    for backend in ("jnp", "pallas"):
+        sim = S.build_sim(topo, NocParams(backend=backend), wl)
+        st0 = sim.init_state()
+        t0 = time.perf_counter()
+        r = S.run(sim, n_cycles, state=st0)
+        jax.block_until_ready(r.cycle)
+        compile_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        r = S.run(sim, n_cycles, state=st0)
+        jax.block_until_ready(r.cycle)
+        cps = n_cycles / (time.perf_counter() - t0)
+        out = S.stats(sim, r)
+        done[backend] = (out["beats_rcvd"].tolist(), out["dma_done"].tolist())
+        rows.append(row(f"sim_throughput/backend_{backend}/compile_s",
+                        compile_s * 1e6, round(compile_s, 2)))
+        rows.append(row(f"sim_throughput/backend_{backend}/cycles_per_s", 0.0,
+                        round(cps)))
+    rows.append(row("sim_throughput/backend_equiv", 0.0,
+                    int(done["jnp"] == done["pallas"]), target=1, cmp="ge"))
+    return rows
+
+
+def bench(full: bool = False, smoke: bool = False,
+          backend: str | None = None) -> list[dict]:
     n_cycles = 4000 if full else 2000
     iters = 3 if full else 2
     rows = []
@@ -86,15 +126,18 @@ def bench(full: bool = False, smoke: bool = False) -> list[dict]:
         rows.append(row("sim_throughput/8x4_smoke/compile_s", compile_s * 1e6,
                         round(compile_s, 2)))
         # topology axis: one torus and one multi-die config must stay green
+        # (on the selected backend, so the pallas CI lane replays the zoo)
         for tname, mk in SMOKE_TOPOLOGIES:
             topo = mk()
             wl = T.dma_workload(topo, "uniform", transfer_kb=1, n_txns=2)
-            sim = S.build_sim(topo, NocParams(), wl)
+            sim = S.build_sim(topo, NocParams(backend=backend or "jnp"), wl)
             out = S.stats(sim, S.run(sim, 300))
             nt = topo.meta["n_tiles"]
             rows.append(row(f"sim_throughput/{tname}_smoke/dma_done", 0.0,
                             int(out["dma_done"][:nt].sum()), target=nt * 2,
                             rel_tol=0.01))
+        if backend:
+            rows += _backend_rows(n_cycles=150)
         return rows
     compile_s, cps = _measure(NocParams(), streams=1, n_cycles=n_cycles, iters=iters)
     rows.append(row("sim_throughput/8x4/compile_s", compile_s * 1e6,
@@ -125,4 +168,29 @@ def bench(full: bool = False, smoke: bool = False) -> list[dict]:
     rows.append(row(f"sim_throughput/sweep{n}_speedup_x", 0.0,
                     round(t_seq / t_sweep, 2), target=SWEEP_SPEEDUP_TARGET,
                     cmp="ge"))
+    if backend:
+        rows += _backend_rows(n_cycles=400 if full else 200)
     return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--backend", default=None, choices=("jnp", "pallas"),
+                    help="run the topology smoke on this router backend and "
+                         "report cycles/s for BOTH backends")
+    args = ap.parse_args()
+    print("name,us_per_call,derived,target,ok")
+    bad = []
+    for r in bench(full=args.full, smoke=args.smoke, backend=args.backend):
+        tgt = "" if r["target"] is None else r["target"]
+        ok = "" if r["ok"] is None else r["ok"]
+        print(f"{r['name']},{r['us_per_call']},{r['derived']},{tgt},{ok}",
+              flush=True)
+        if r["ok"] is False:
+            bad.append(r["name"])
+    if bad:
+        raise SystemExit("failed targets: " + ", ".join(bad))

@@ -6,6 +6,7 @@ Occamy) and the vmapped multi-config sweep engine.
 
 Run:  PYTHONPATH=src python examples/noc_explore.py [--pattern uniform]
       PYTHONPATH=src python examples/noc_explore.py --channels 3 4 5
+      PYTHONPATH=src python examples/noc_explore.py --backend pallas
       PYTHONPATH=src python examples/noc_explore.py --collectives
       PYTHONPATH=src python examples/noc_explore.py --sweep
       PYTHONPATH=src python examples/noc_explore.py --topology torus --collectives
@@ -35,7 +36,7 @@ def make_topo(name: str, big: bool = False):
     return build_topology(name, **(DEMO_KW_BIG if big else DEMO_KW)[name])
 
 
-def pattern_sweep(pattern: str, topology: str = "mesh"):
+def pattern_sweep(pattern: str, topology: str = "mesh", backend: str = "jnp"):
     """Utilization vs transfer size — all sizes batched through ONE
     jit-compiled vmapped scan (run_sweep) instead of one compile per size."""
     topo = make_topo(topology, big=True)
@@ -46,7 +47,7 @@ def pattern_sweep(pattern: str, topology: str = "mesh"):
     sizes = (1, 4, 16, 32)
     wls = [T.dma_workload(topo, pattern, transfer_kb=kb, n_txns=4)
            for kb in sizes]
-    sim = S.build_sim(topo, NocParams(), wls[0])
+    sim = S.build_sim(topo, NocParams(backend=backend), wls[0])
     sts = S.run_sweep(sim, wls, 3000 + 1200 * max(sizes))
     nt = topo.meta["n_tiles"]
     for kb, st in zip(sizes, sts):
@@ -57,14 +58,14 @@ def pattern_sweep(pattern: str, topology: str = "mesh"):
         print(f"  {kb:3d} kB: util={util:5.1%}  transfers done={done}/{nt*4}")
 
 
-def collectives_demo(topology: str = "mesh"):
+def collectives_demo(topology: str = "mesh", backend: str = "jnp"):
     """Collective schedules lowered onto the fabric: measured completion
     cycle vs the simulator-calibrated analytical model, and the effective
     collective bandwidth at paper frequency. Works on every zoo topology;
     Occamy (no grid coordinates) runs the 1-D ring family over its
     clusters instead of the 2-D dimension-ordered schedule."""
     topo = make_topo(topology)
-    params = NocParams()
+    params = NocParams(backend=backend)
     n = topo.meta["n_tiles"]
     gridded = topo.tile_coord is not None and "nx" in topo.meta
     print(f"== collectives on {topo.name} ({n} tiles, 16 kB, wide links) ==")
@@ -93,7 +94,7 @@ def collectives_demo(topology: str = "mesh"):
           f"tables, model terms from FabricCollectiveModel.for_topology)")
 
 
-def sweep_demo(topology: str = "mesh"):
+def sweep_demo(topology: str = "mesh", backend: str = "jnp"):
     """The vmapped sweep engine: N pattern x size configs in one compile."""
     import time
 
@@ -103,7 +104,7 @@ def sweep_demo(topology: str = "mesh"):
     if topo.tile_coord is None:
         raise SystemExit(f"{topology} has no grid coordinates; "
                          "use --collectives for the Occamy demos")
-    params = NocParams()
+    params = NocParams(backend=backend)
     pats = ["uniform", "shuffle", "bit-complement", "transpose", "neighbor"]
     if topo.meta.get("n_hbm", 0):
         pats.append("tiled-matmul")
@@ -126,7 +127,7 @@ def sweep_demo(topology: str = "mesh"):
               f"done={out['dma_done'][:nt].sum()}")
 
 
-def ordering_demo():
+def ordering_demo(backend: str = "jnp"):
     print("== end-to-end ordering (paper Sec. III/IV) ==")
     topo = build_mesh(nx=4, ny=4)
     for name, (order, streams, alt, uniq) in {
@@ -136,17 +137,17 @@ def ordering_demo():
     }.items():
         wl = T.ordering_workload(topo, streams=streams, alternate=alt,
                                  unique_txn=uniq, n_txns=16, transfer_kb=1)
-        sim = S.build_sim(topo, NocParams(ni_order=order), wl)
+        sim = S.build_sim(topo, NocParams(ni_order=order, backend=backend), wl)
         out = S.stats(sim, S.run(sim, 4000))
         print(f"  {name:42s} done@cycle {out['last_rx'][0]:5d}  "
               f"NI stalls {out['ni_stalls'][0]:4d}")
 
 
-def hbm_comparison():
+def hbm_comparison(backend: str = "jnp"):
     print("== full-load HBM utilization: FlooNoC mesh vs Occamy xbars ==")
     mesh = build_mesh(nx=4, ny=8)
     wl = T.hbm_workload(mesh, full_load=True, n_txns=8, transfer_kb=4)
-    sim = S.build_sim(mesh, NocParams(), wl)
+    sim = S.build_sim(mesh, NocParams(backend=backend), wl)
     out = S.stats(sim, S.run(sim, 16000))
     p = NocParams()
     agg_f = out["beats_rcvd"][:32].sum() / max(out["last_rx"][:32].max(), 1) / p.hbm_rate / 8
@@ -163,14 +164,14 @@ def hbm_comparison():
     for e in range(nt):
         dd[e, 0] = nt + (e % 8); dt[e, 0] = 8
     wlo = dataclasses.replace(wlo, dma_dst=dd, dma_txns=dt, dma_beats=64)
-    simo = S.build_sim(occ, NocParams(max_outstanding=4), wlo)
+    simo = S.build_sim(occ, NocParams(max_outstanding=4, backend=backend), wlo)
     outo = S.stats(simo, S.run(simo, 16000))
     agg_o = outo["beats_rcvd"][:nt].sum() / max(outo["last_rx"][:nt].max(), 1) / p.hbm_rate / 8
     print(f"  FlooNoC 8x4 mesh: {agg_f:5.1%} of HBM peak (paper: ~100%)")
     print(f"  Occamy hierarchy: {agg_o:5.1%} of HBM peak (paper: ~60%)")
 
 
-def channel_sweep(counts, pattern: str):
+def channel_sweep(counts, pattern: str, backend: str = "jnp"):
     """Sweep NocParams.n_channels: wide traffic stripes over the extra wide
     channels by TxnID, so multi-stream DMA gains wide-link bandwidth."""
     print(f"== {pattern}: n_channels sweep (2 DMA streams/tile, 8 kB reads) ==")
@@ -178,7 +179,7 @@ def channel_sweep(counts, pattern: str):
     nt = topo.meta["n_tiles"]
     for c in counts:
         wl = T.dma_workload(topo, pattern, transfer_kb=8, n_txns=4, streams=2)
-        sim = S.build_sim(topo, NocParams(n_channels=c), wl)
+        sim = S.build_sim(topo, NocParams(n_channels=c, backend=backend), wl)
         out = S.stats(sim, S.run(sim, 16000))
         beats = out["beats_rcvd"][:nt].astype(float)
         util = (beats / np.maximum(out["last_rx"][:nt], 1)).mean()
@@ -201,16 +202,20 @@ if __name__ == "__main__":
                     help="run the collectives-on-fabric demo")
     ap.add_argument("--sweep", action="store_true",
                     help="run the vmapped multi-config sweep demo")
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
+                    help="router-cycle compute backend (pallas = the "
+                         "(C, R)-gridded kernel, interpret mode off TPU; "
+                         "bit-identical to jnp)")
     args = ap.parse_args()
     if args.channels:
-        channel_sweep(args.channels, args.pattern)
+        channel_sweep(args.channels, args.pattern, backend=args.backend)
     elif args.collectives:
-        collectives_demo(args.topology)
+        collectives_demo(args.topology, backend=args.backend)
     elif args.sweep:
-        sweep_demo(args.topology)
+        sweep_demo(args.topology, backend=args.backend)
     elif args.topology != "mesh":
-        pattern_sweep(args.pattern, args.topology)
+        pattern_sweep(args.pattern, args.topology, backend=args.backend)
     else:
-        pattern_sweep(args.pattern)
-        ordering_demo()
-        hbm_comparison()
+        pattern_sweep(args.pattern, backend=args.backend)
+        ordering_demo(backend=args.backend)
+        hbm_comparison(backend=args.backend)

@@ -1,3 +1,13 @@
+"""Cycle-accurate FlooNoC simulator: topologies, fabric engine, workloads.
+
+Public surface: :class:`NocParams` (microarchitecture + channel count +
+router compute backend), :class:`Topology` and the ``build_*`` topology-zoo
+builders behind :func:`build_topology`, with the full-system simulator in
+``repro.core.noc.sim`` (``build_sim`` / ``run`` / ``run_trace`` /
+``run_sweep``) and workload builders in ``repro.core.noc.traffic`` /
+``collective_traffic``. See ``src/repro/core/noc/README.md`` and
+``docs/ARCHITECTURE.md`` for the paper-to-code map.
+"""
 from repro.core.noc.params import NocParams
 from repro.core.noc.topology import (
     TOPOLOGIES,

@@ -45,6 +45,7 @@ LINK_FIELDS = {
 
 
 def header_bits() -> int:
+    """Total flit-header bits shared by every link (Table I fields)."""
     return sum(HEADER_FIELDS.values())
 
 
@@ -82,6 +83,7 @@ XBAR_PER_PORT_KGE = 38.0
 
 
 def ni_area_kge(order: str = "robless") -> float:
+    """Network-interface area in kGE for an ordering scheme (Fig. 10)."""
     return NI_ROBLESS_KGE + (ROB_KGE if order == "rob" else 0.0)
 
 
@@ -110,28 +112,34 @@ ROUTER_BUFFER_FRACTION = 0.53  # SCM in/out buffers within router area
 
 @dataclass(frozen=True)
 class SystemArea:
+    """Die-area decomposition: clusters x tile area + top-level (Table II)."""
+
     n_clusters: int
     tile_mm2: float
     top_mm2: float
 
     @property
     def die_mm2(self) -> float:
+        """Total die area in mm^2."""
         return self.n_clusters * self.tile_mm2 + self.top_mm2
 
 
 def floonoc_system(n_cols: int = 4, n_rows: int = 8) -> SystemArea:
+    """FlooNoC mesh system area (Table II: 36 mm^2 at 8x4)."""
     n = n_cols * n_rows
     top = 3.3 if n >= 32 else 2.5  # Table II top-level area
     return SystemArea(n_clusters=n, tile_mm2=TILE_AREA_MM2, top_mm2=top)
 
 
 def occamy_system() -> SystemArea:
+    """Occamy baseline system area (24 clusters + hierarchical Xbars)."""
     # 24 clusters, 25.1 mm^2 cluster area total, 16.7 mm^2 top-level Xbars
     return SystemArea(n_clusters=24, tile_mm2=25.1 / 24, top_mm2=16.7)
 
 
 def gflops_dp(n_clusters: int, freq_ghz: float, cores_per_cluster: int = 8,
               flops_per_core_cycle: int = 2) -> float:
+    """Peak double-precision GFLOP/s of a cluster array (Table III)."""
     return n_clusters * cores_per_cluster * flops_per_core_cycle * freq_ghz
 
 
@@ -148,6 +156,7 @@ def energy_per_byte_per_hop_pj(v: float = V_NOM) -> float:
 
 
 def transfer_energy_pj(n_bytes: int, hops: int, v: float = V_NOM) -> float:
+    """Energy in pJ to move ``n_bytes`` across ``hops`` routers (Fig. 9b)."""
     return energy_per_byte_per_hop_pj(v) * n_bytes * hops
 
 

@@ -86,10 +86,12 @@ class CollectiveSchedule:
 
     @property
     def n_streams(self) -> int:
+        """DMA streams (= independent ring pipelines) per endpoint."""
         return self.dst_seq.shape[1]
 
     @property
     def n_steps(self) -> int:
+        """Maximum schedule length K over all (endpoint, stream) programmes."""
         return self.dst_seq.shape[2]
 
 
@@ -297,6 +299,7 @@ def barrier(topo: Topology, *, streams: int = 1,
 
 
 def build(topo: Topology, name: str, **kw) -> CollectiveSchedule:
+    """Build a named collective schedule (see ``COLLECTIVES``) on ``topo``."""
     builders = {"all-gather": all_gather, "reduce-scatter": reduce_scatter,
                 "all-reduce": all_reduce, "all-reduce-2d": all_reduce_2d,
                 "multicast": multicast, "barrier": barrier}

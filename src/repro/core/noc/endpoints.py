@@ -60,10 +60,12 @@ class Workload:
 
     @property
     def n_streams(self) -> int:
+        """Number of DMA streams per endpoint (the paper's multi-stream DMA)."""
         return self.dma_dst.shape[1]
 
 
 def idle_workload(E: int, n_tiles: int, streams: int = 1) -> Workload:
+    """All-quiet Workload template; callers dataclasses.replace traffic in."""
     z = np.zeros((E,), np.float32)
     m1 = np.full((E,), -1, np.int32)
     return Workload(
@@ -78,6 +80,13 @@ def idle_workload(E: int, n_tiles: int, streams: int = 1) -> Workload:
 @jax.tree_util.register_dataclass
 @dataclass
 class EndpointState:
+    """Per-endpoint simulator state, vectorized over all E endpoints.
+
+    Covers the NI ordering trackers, narrow/DMA generators, the write-burst
+    serializer, the memory request queue + server, per-channel egress
+    queues, and the statistics counters surfaced by ``sim.stats``.
+    """
+
     # NI ordering
     ni_cnt: jnp.ndarray  # [E, T] outstanding per TxnID
     ni_dst: jnp.ndarray  # [E, T] destination of outstanding txns (-1)
@@ -141,6 +150,7 @@ MQ_SRC, MQ_TXN, MQ_BEATS, MQ_KIND, MQ_TS, MQ_META = range(NMQ)
 
 
 def init_endpoints(E: int, params: NocParams, streams: int) -> EndpointState:
+    """Zeroed EndpointState for E endpoints with ``streams`` DMA streams."""
     T, Q = params.n_txn_ids, params.memq_depth
     EQ = params.egress_depth
     C = params.n_channels

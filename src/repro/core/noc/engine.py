@@ -1,13 +1,23 @@
 """Vectorized cycle-accurate router fabric in JAX, batched over physical
-channels.
+channels, with a selectable per-cycle compute backend.
 
 One FabricState carries *all* physical channels of the NoC (the paper
 instantiates three separate routers per tile: req / rsp / wide; PATRONoC-style
 configurations add more). State is a packed array over
-[C channels, R routers, P ports, DEPTH fifo slots, NF flit fields]: the
-per-channel router logic is written once for a single channel and vmapped over
-the leading channel axis, so the lax.scan step body contains no Python channel
-loop and the traced op count is independent of the channel count.
+[C channels, R routers, P ports, DEPTH fifo slots, NF flit fields].
+
+The per-cycle router datapath itself — cycle-start snapshot, round-robin
+arbitration, wormhole-lock updates, FIFO push/pop — lives in
+``repro.kernels.noc_router``:
+
+* ``ref.py`` is the reference implementation (the logic that used to be
+  inlined here as ``_cycle_one``); ``backend="jnp"`` vmaps it over the
+  leading channel axis, so the lax.scan step body contains no Python channel
+  loop and the traced op count is independent of the channel count.
+* ``noc_router.py`` is a Pallas kernel gridded over (C, R) — one program per
+  (channel, router) — selected with ``backend="pallas"`` (interpret mode off
+  TPU). Both backends run the same decision functions and are bit-identical
+  (tests/test_noc_backend.py).
 
 Flits are a single int32 array with a trailing field axis (see FLIT_FIELDS /
 F_* indices) instead of a dict of seven arrays: every push/pop/gather is one
@@ -27,31 +37,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.noc.topology import Topology
-
-# packed flit layout: trailing axis of NF int32 fields
-FLIT_FIELDS = ("dst", "src", "kind", "txn", "last", "ts", "meta")
-NF = len(FLIT_FIELDS)
-F_DST, F_SRC, F_KIND, F_TXN, F_LAST, F_TS, F_META = range(NF)
-
-
-def empty_flits(shape) -> jnp.ndarray:
-    """Zeroed packed flit array of shape [*shape, NF]."""
-    return jnp.zeros((*tuple(shape), NF), jnp.int32)
-
-
-def pack_flit(dst, src, kind, txn, last, ts, meta) -> jnp.ndarray:
-    """Pack per-field values (broadcast against dst's shape) into [..., NF]."""
-    ref = jnp.asarray(dst, jnp.int32)
-    parts = [
-        jnp.broadcast_to(jnp.asarray(v, jnp.int32), ref.shape)
-        for v in (ref, src, kind, txn, last, ts, meta)
-    ]
-    return jnp.stack(parts, axis=-1)
+from repro.kernels.noc_router import ops as router_ops
+from repro.kernels.noc_router.ref import (  # noqa: F401  (re-exported API)
+    F_DST,
+    F_KIND,
+    F_LAST,
+    F_META,
+    F_SRC,
+    F_TS,
+    F_TXN,
+    FLIT_FIELDS,
+    NF,
+    empty_flits,
+    fifo_pop,
+    fifo_push,
+    heads,
+    pack_flit,
+    router_cycle_reference,
+)
 
 
 @jax.tree_util.register_dataclass
 @dataclass
 class FabricState:
+    """Channel-batched router-fabric state (one pytree for all channels)."""
+
     in_buf: jnp.ndarray  # [C, R, P, Din, NF]
     in_cnt: jnp.ndarray  # [C, R, P]
     out_buf: jnp.ndarray  # [C, R, P, Dout, NF]
@@ -63,6 +73,7 @@ class FabricState:
 def init_fabric(
     topo: Topology, depth_in: int, depth_out: int, n_channels: int
 ) -> FabricState:
+    """Empty fabric state for ``n_channels`` physical channels of ``topo``."""
     C, R, P = n_channels, topo.n_routers, topo.n_ports
     return FabricState(
         in_buf=empty_flits((C, R, P, depth_in)),
@@ -74,26 +85,10 @@ def init_fabric(
     )
 
 
-def fifo_pop(buf: jnp.ndarray, cnt, pop_mask):
-    shifted = jnp.roll(buf, -1, axis=-2)
-    newbuf = jnp.where(pop_mask[..., None, None], shifted, buf)
-    return newbuf, cnt - pop_mask.astype(jnp.int32)
-
-
-def fifo_push(buf: jnp.ndarray, cnt, push_mask, flit: jnp.ndarray):
-    D = buf.shape[-2]
-    idx = jnp.clip(cnt, 0, D - 1)
-    onehot = jax.nn.one_hot(idx, D, dtype=jnp.bool_) & push_mask[..., None]
-    newbuf = jnp.where(onehot[..., None], flit[..., None, :], buf)
-    return newbuf, cnt + push_mask.astype(jnp.int32)
-
-
-def heads(buf: jnp.ndarray) -> jnp.ndarray:
-    return buf[..., 0, :]
-
-
 @dataclass(frozen=True)
 class FabricTables:
+    """Static routing/wiring tables shared by every physical channel."""
+
     route: jnp.ndarray  # [R, E]
     link_src: jnp.ndarray  # [R, P, 2] upstream (router, port) feeding my in port
     link_dst: jnp.ndarray  # [R, P, 2]
@@ -102,6 +97,7 @@ class FabricTables:
 
 
 def make_tables(topo: Topology) -> FabricTables:
+    """Device-resident FabricTables derived from a Topology's numpy tables."""
     R, P = topo.n_routers, topo.n_ports
     link_src = np.full((R, P, 2), -1, np.int32)
     for r in range(R):
@@ -119,69 +115,12 @@ def make_tables(topo: Topology) -> FabricTables:
 
 
 def _cycle_one(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarray):
-    """One cycle of a single channel: decide arb + link from the snapshot,
-    then apply. State leaves here are unbatched ([R, P, ...])."""
-    R, P = st.in_cnt.shape
-    Din = st.in_buf.shape[-2]
-    Dout = st.out_buf.shape[-2]
-
-    # ---------------- arbitration decisions (from snapshot) ----------------
-    h = heads(st.in_buf)  # [R, P, NF]
-    h_valid = st.in_cnt > 0
-    req_port = jnp.take_along_axis(tb.route, jnp.clip(h[..., F_DST], 0, None), axis=1)
-    req_port = jnp.where(h_valid, req_port, -1)  # [R, P_in]
-
-    pout = jnp.arange(P)
-    pin = jnp.arange(P)[None, :, None]
-    elig = req_port[:, :, None] == pout[None, None, :]
-    locked = st.wh_lock[:, None, :]
-    elig &= (locked < 0) | (locked == pin)
-    elig &= (st.out_cnt < Dout)[:, None, :]  # no same-cycle fall-through
-
-    score = (pin - st.rr_ptr[:, None, :]) % P
-    score = jnp.where(elig, score, P + 1)
-    winner = jnp.argmin(score, axis=1)  # [R, P_out]
-    granted = jnp.take_along_axis(score, winner[:, None, :], axis=1)[:, 0, :] <= P
-    win_onehot = jax.nn.one_hot(winner, P, axis=1, dtype=jnp.bool_) & granted[:, None, :]
-    arb_pop = jnp.any(win_onehot, axis=2)  # [R, P_in]
-    chosen = jnp.take_along_axis(h, winner[:, :, None], axis=1)  # [R, P_out, NF]
-
-    rr = jnp.where(granted, (winner + 1) % P, st.rr_ptr)
-    is_tail = chosen[..., F_LAST] > 0
-    wh = jnp.where(granted & ~is_tail, winner, st.wh_lock)
-    wh = jnp.where(granted & is_tail, -1, wh)
-
-    # ---------------- link decisions (from snapshot) ----------------
-    out_heads = heads(st.out_buf)
-    out_valid = st.out_cnt > 0
-
-    er, ep_p = tb.ep_attach[:, 0], tb.ep_attach[:, 1]
-    ep_flit = out_heads[er, ep_p]  # [E, NF]
-    ep_valid = out_valid[er, ep_p] & ep_ingress_space
-
-    src_r, src_p = tb.link_src[..., 0], tb.link_src[..., 1]
-    have_up = src_r >= 0
-    up_head = out_heads[jnp.clip(src_r, 0, R - 1), jnp.clip(src_p, 0, P - 1)]
-    up_valid = out_valid[jnp.clip(src_r, 0, R - 1), jnp.clip(src_p, 0, P - 1)] & have_up
-    # space after this cycle's arb pops (slot freed same cycle is reusable)
-    in_cnt_after_pop = st.in_cnt - arb_pop.astype(jnp.int32)
-    link_accept = up_valid & (in_cnt_after_pop < Din)
-
-    # sent mask on the upstream side
-    dst_r, dst_p = tb.link_dst[..., 0], tb.link_dst[..., 1]
-    sent = jnp.where(
-        dst_r >= 0,
-        link_accept[jnp.clip(dst_r, 0, R - 1), jnp.clip(dst_p, 0, P - 1)],
-        False,
-    )
-    sent = sent.at[er, ep_p].set(sent[er, ep_p] | ep_valid)
-
-    # ---------------- apply ----------------
-    in1, in_cnt1 = fifo_pop(st.in_buf, st.in_cnt, arb_pop)
-    in2, in_cnt2 = fifo_push(in1, in_cnt1, link_accept, up_head)
-    out1, out_cnt1 = fifo_pop(st.out_buf, st.out_cnt, sent)
-    out2, out_cnt2 = fifo_push(out1, out_cnt1, granted, chosen)
-
+    """One cycle of a single channel (reference path; state [R, P, ...])."""
+    (in2, in_cnt2, out2, out_cnt2, rr, wh, ep_flit, ep_valid) = (
+        router_cycle_reference(
+            st.in_buf, st.in_cnt, st.out_buf, st.out_cnt, st.rr_ptr,
+            st.wh_lock, tb.route, tb.link_src, tb.link_dst, tb.port_ep,
+            tb.ep_attach, ep_ingress_space))
     return FabricState(in2, in_cnt2, out2, out_cnt2, rr, wh), ep_flit, ep_valid
 
 
@@ -206,14 +145,26 @@ _cycle_all = jax.vmap(_cycle_one, in_axes=(0, None, 0))
 _inject_all = jax.vmap(_inject_one, in_axes=(0, None, 0, 0))
 
 
-def fabric_cycle(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarray):
+def fabric_cycle(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarray,
+                 backend: str = "jnp", interpret=None):
     """One cycle of every channel at once.
 
     ep_ingress_space: [C, E] bool — endpoint can accept one flit on that
     channel this cycle (a refused flit stays in the router's output buffer:
     memory-server-style backpressure into the fabric).
+    ``backend`` selects the per-cycle compute path: ``"jnp"`` (vmapped
+    reference) or ``"pallas"`` ((C, R)-gridded kernel; ``interpret=None``
+    auto-interprets off TPU). The backends are bit-identical.
     Returns (state', ep_flit [C, E, NF], ep_valid [C, E])."""
-    return _cycle_all(st, tb, ep_ingress_space)
+    if backend == "jnp":
+        return _cycle_all(st, tb, ep_ingress_space)
+    (in2, in_cnt2, out2, out_cnt2, rr, wh, ep_flit, ep_valid) = (
+        router_ops.router_cycle(
+            st.in_buf, st.in_cnt, st.out_buf, st.out_cnt, st.rr_ptr,
+            st.wh_lock, tb.route, tb.link_src, tb.link_dst, tb.port_ep,
+            tb.ep_attach, ep_ingress_space, backend=backend,
+            interpret=interpret))
+    return FabricState(in2, in_cnt2, out2, out_cnt2, rr, wh), ep_flit, ep_valid
 
 
 def inject(st: FabricState, tb: FabricTables, flit: jnp.ndarray, want: jnp.ndarray):

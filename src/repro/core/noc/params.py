@@ -6,6 +6,14 @@ from dataclasses import dataclass
 
 @dataclass(frozen=True)
 class NocParams:
+    """FlooNoC microarchitecture + simulator configuration (paper defaults).
+
+    Covers router buffer depths, NI ordering scheme and credits, cluster/
+    memory latencies (calibrated to Fig. 7), the HBM model, link widths
+    (Table I), physical channel count (``n_channels``), and the per-cycle
+    router compute ``backend`` ("jnp" | "pallas").
+    """
+
     # router microarchitecture
     depth_in: int = 2  # input FIFO depth (paper: minimal input buffers)
     depth_out: int = 2  # output buffers (timing closure across >1mm links)
@@ -43,9 +51,18 @@ class NocParams:
     # channels by TxnID (PATRONoC-style parallel AXI channels).
     n_channels: int = 3
 
+    # per-cycle router compute backend: "jnp" (vmapped reference) or
+    # "pallas" ((C, R)-gridded kernel, interpreted off TPU). Bit-identical;
+    # see repro.kernels.noc_router and tests/test_noc_backend.py.
+    backend: str = "jnp"
+
     def __post_init__(self):
+        """Validate the channel count and backend name."""
         if self.n_channels < 3:
             raise ValueError("n_channels must be >= 3 (req, rsp, >=1 wide)")
+        if self.backend not in ("jnp", "pallas"):
+            raise ValueError(
+                f"backend must be 'jnp' or 'pallas', got {self.backend!r}")
 
 
 # flit kinds

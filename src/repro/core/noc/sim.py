@@ -45,6 +45,8 @@ from repro.core.noc.topology import Topology
 @jax.tree_util.register_dataclass
 @dataclass
 class SimState:
+    """Full simulator state: fabric + endpoints + the cycle counter."""
+
     fabric: eng.FabricState  # channel-batched [C, ...]
     eps: epm.EndpointState
     cycle: jnp.ndarray
@@ -344,6 +346,14 @@ def _memory(st: epm.EndpointState, cycle, params: NocParams, is_hbm, is_mem):
 
 @dataclass
 class Sim:
+    """A built simulator: topology + params + workload + derived tables.
+
+    Step with :meth:`step`, or use the module-level ``run`` / ``run_trace``
+    / ``run_sweep`` drivers, which share one jit-cached scan body per
+    ``(n_cycles, trace)`` key. The router compute backend is selected by
+    ``params.backend`` ("jnp" | "pallas", bit-identical).
+    """
+
     topo: Topology
     params: NocParams
     wl: epm.Workload
@@ -353,6 +363,7 @@ class Sim:
     _jit_cache: dict = field(default_factory=dict, repr=False, compare=False)
 
     def init_state(self, wl: epm.Workload | None = None) -> SimState:
+        """Fresh SimState at cycle 0 (``wl`` overrides the built workload)."""
         wl = self.wl if wl is None else wl
         fabric = eng.init_fabric(self.topo, self.params.depth_in,
                                  self.params.depth_out, self.params.n_channels)
@@ -379,7 +390,8 @@ class Sim:
         space = jnp.ones((C, E), bool).at[CH_REQ].set(rsp_free)
         er, ep_p = self.tables.ep_attach[:, 0], self.tables.ep_attach[:, 1]
         req_waiting = st.fabric.out_cnt[CH_REQ, er, ep_p] > 0
-        fabric, ep_flit, ep_valid = eng.fabric_cycle(st.fabric, self.tables, space)
+        fabric, ep_flit, ep_valid = eng.fabric_cycle(
+            st.fabric, self.tables, space, backend=self.params.backend)
         # 2) endpoint processing
         eps = _ingest(st.eps, ep_flit, ep_valid, cycle, self.params, wl)
         eps = dataclasses.replace(
@@ -402,7 +414,9 @@ class Sim:
         if fn is None:
             @jax.jit
             def fn(st):
+                """Scan ``step`` for n_cycles (closure-jitted)."""
                 def body(s, _):
+                    """One scan step: advance a cycle, optionally trace."""
                     s2, deliver = self.step(s)
                     return s2, (deliver if with_trace else None)
 
@@ -420,9 +434,12 @@ class Sim:
         if fn is None:
             @jax.jit
             def fn(batch):
+                """Vmapped scan over the batched workload arrays."""
                 def one(values):
+                    """Scan one workload configuration to its final state."""
                     wl = dataclasses.replace(self.wl, **dict(zip(fields, values)))
                     def body(s, _):
+                        """One scan step under the traced workload."""
                         s2, _ = self.step(s, wl)
                         return s2, None
                     s, _ = jax.lax.scan(body, self.init_state(wl), None,
@@ -435,6 +452,7 @@ class Sim:
 
 
 def build_sim(topo: Topology, params: NocParams, wl: epm.Workload) -> Sim:
+    """Assemble a Sim: fabric tables + HBM/memory maps for ``topo``."""
     E = topo.n_endpoints
     is_hbm = np.zeros((E,), bool)
     n_hbm = topo.meta.get("n_hbm", 0)
@@ -448,6 +466,7 @@ def build_sim(topo: Topology, params: NocParams, wl: epm.Workload) -> Sim:
 
 
 def run(sim: Sim, n_cycles: int, state: SimState | None = None) -> SimState:
+    """Advance ``sim`` by ``n_cycles`` through one jit-compiled scan."""
     st = state if state is not None else sim.init_state()
     s, _ = sim._scan_fn(n_cycles, with_trace=False)(st)
     return s
@@ -505,6 +524,7 @@ def run_sweep(sim: Sim, wls: list[epm.Workload], n_cycles: int) -> list[SimState
 
 
 def stats(sim: Sim, st: SimState) -> dict:
+    """Summarize a final SimState: latency, beats, utilization, stalls."""
     eps = st.eps
     cyc = int(st.cycle)
     n_tiles = sim.wl.n_tiles

@@ -15,6 +15,13 @@ import numpy as np
 
 @dataclass
 class Topology:
+    """A routed fabric shape: router wiring, endpoint attachments, tables.
+
+    Everything the engine needs is tabular (``link_to``, ``ep_attach``,
+    ``route``), so one engine simulates every zoo member; ``meta`` carries
+    builder-specific facts (tile counts, grid dims, HBM count).
+    """
+
     n_routers: int
     n_ports: int  # max ports per router (padded)
     n_endpoints: int

@@ -59,6 +59,10 @@ PATTERNS = ["uniform", "shuffle", "bit-complement", "transpose", "neighbor", "ti
 def dma_workload(topo: Topology, pattern: str, *, transfer_kb: int = 32,
                  n_txns: int = 16, streams: int = 1, write: bool = False,
                  seed: int = 7) -> Workload:
+    """Open-loop wide-DMA workload: every tile issues ``n_txns`` transfers
+    of ``transfer_kb`` kB (reads by default, writes with ``write=True``)
+    over ``streams`` DMA streams to ``pattern_dst`` destinations — the
+    Fig. 8 traffic patterns."""
     coord, nt, nx, ny = _coords(topo)
     E = topo.n_endpoints
     beats = max(transfer_kb * 1024 // 64, 1)  # 64 B per wide beat
@@ -74,6 +78,8 @@ def dma_workload(topo: Topology, pattern: str, *, transfer_kb: int = 32,
 
 
 def narrow_workload(topo: Topology, pattern: str, rate: float, seed: int = 7) -> Workload:
+    """Narrow-channel load: each tile sends ``rate`` requests/cycle to its
+    ``pattern_dst`` destination (Fig. 7 latency-vs-load experiments)."""
     coord, nt, nx, ny = _coords(topo)
     E = topo.n_endpoints
     wl = idle_workload(E, n_tiles=nt)

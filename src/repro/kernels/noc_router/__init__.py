@@ -1,0 +1,4 @@
+"""Router-cycle kernel for the cycle-accurate NoC fabric (jnp + Pallas)."""
+from repro.kernels.noc_router.ops import BACKENDS, router_cycle
+
+__all__ = ["BACKENDS", "router_cycle"]

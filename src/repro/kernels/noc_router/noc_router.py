@@ -1,0 +1,199 @@
+"""Pallas backend for the FlooNoC router cycle, gridded over (C, R).
+
+One simulated cycle of the channel-batched fabric is two ``pallas_call``s,
+each with ``grid=(n_channels, n_routers)`` — one program per (channel,
+router), mirroring the hardware's per-tile router instances:
+
+1. **arb** — every program runs round-robin output arbitration for its
+   router from the cycle-start snapshot (its own input heads, occupancy,
+   wormhole locks and routing-table row) and emits the decisions:
+   pop/grant masks, the chosen flits, updated rr/wormhole state, and
+   whether each input FIFO has space after its pops (``in_space``).
+2. **apply** — every program consumes its own decisions plus the
+   fabric-wide snapshot (all output heads/occupancy and ``in_space``, which
+   is exactly the cross-router information a physical link sees) to resolve
+   link traversals, then applies the FIFO pops/pushes for its router.
+
+The split is required because link acceptance depends on the *downstream*
+router's arbitration pops: ``in_space`` of every router must be globally
+visible before any link decision, a barrier between the two kernels.
+
+All decision math is imported from ``repro.kernels.noc_router.ref`` — the
+functions are rank-generic over the leading router axis, so the Pallas
+programs (R-block of 1) execute the very same code as the vmapped jnp
+reference (full R), making the backends bit-identical by construction.
+
+On CPU CI this runs with ``interpret=True`` (the grid becomes a scanned
+loop, still jit-able inside ``lax.scan``); on TPU the same kernels compile
+natively. Use ``repro.kernels.noc_router.ops.router_cycle`` for the
+backend-dispatching entry point.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.noc_router import ref
+from repro.kernels.noc_router.ref import NF
+
+
+def _arb_kernel(in_buf_ref, in_cnt_ref, out_cnt_ref, rr_ref, wh_ref, route_ref,
+                arb_pop_ref, granted_ref, chosen_ref, rr_out_ref, wh_out_ref,
+                in_space_ref, *, depth_out: int):
+    """Arbitration decisions for one (channel, router) program."""
+    arb = ref.arb_decisions(
+        in_buf_ref[0],  # [1, P, Din, NF]
+        in_cnt_ref[0],  # [1, P]
+        out_cnt_ref[0],
+        rr_ref[0],
+        wh_ref[0],
+        route_ref[...],  # [1, E]
+        depth_out=depth_out,
+    )
+    arb_pop_ref[...] = arb.arb_pop[None]
+    granted_ref[...] = arb.granted[None]
+    chosen_ref[...] = arb.chosen[None]
+    rr_out_ref[...] = arb.rr_ptr[None]
+    wh_out_ref[...] = arb.wh_lock[None]
+    in_space_ref[...] = arb.in_space[None]
+
+
+def _apply_kernel(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref,
+                  arb_pop_ref, granted_ref, chosen_ref, in_space_ref,
+                  out_heads_all_ref, out_valid_all_ref, in_space_all_ref,
+                  link_src_ref, link_dst_ref, port_ep_ref, ep_space_ref,
+                  new_in_buf_ref, new_in_cnt_ref, new_out_buf_ref,
+                  new_out_cnt_ref):
+    """Link resolution + FIFO update for one (channel, router) program."""
+    in_buf = in_buf_ref[0]  # [1, P, Din, NF]
+    in_cnt = in_cnt_ref[0]  # [1, P]
+    out_buf = out_buf_ref[0]  # [1, P, Dout, NF]
+    out_cnt = out_cnt_ref[0]
+
+    up_head, link_accept = ref.link_inputs(
+        out_heads_all_ref[0],  # [R, P, NF] full-fabric snapshot
+        out_valid_all_ref[0],  # [R, P]
+        link_src_ref[...],  # [1, P, 2] own upstream table row
+        in_space_ref[0],  # [1, P] own post-pop input space
+    )
+    sent = ref.sent_mask(
+        out_cnt > 0,  # [1, P] own output-head validity
+        link_dst_ref[...],  # [1, P, 2]
+        port_ep_ref[...],  # [1, P]
+        in_space_all_ref[0],  # [R, P] downstream space, fabric-wide
+        ep_space_ref[0],  # [E] endpoint ingress space, this channel
+    )
+    in2, in_cnt2, out2, out_cnt2 = ref.apply_cycle(
+        in_buf, in_cnt, out_buf, out_cnt,
+        arb_pop_ref[0], granted_ref[0], chosen_ref[0],
+        link_accept, up_head, sent)
+    new_in_buf_ref[...] = in2[None]
+    new_in_cnt_ref[...] = in_cnt2[None]
+    new_out_buf_ref[...] = out2[None]
+    new_out_cnt_ref[...] = out_cnt2[None]
+
+
+def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+                        route, link_src, link_dst, port_ep, ep_attach,
+                        ep_space, *, interpret: bool = False):
+    """One fabric cycle on the Pallas backend.
+
+    State is channel-batched (``in_buf`` [C, R, P, Din, NF], counters
+    [C, R, P]); tables are shared across channels (``route`` [R, E],
+    ``link_src``/``link_dst`` [R, P, 2], ``port_ep`` [R, P], ``ep_attach``
+    [E, 2]); ``ep_space`` [C, E] is the per-channel endpoint ingress-space
+    mask. Returns the updated state plus the endpoint deliveries
+    ``(ep_flit [C, E, NF], ep_valid [C, E])`` — identical, bit for bit, to
+    ``ref.router_cycle_reference`` vmapped over channels.
+    """
+    C, R, P = in_cnt.shape
+    Din = in_buf.shape[-2]
+    Dout = out_buf.shape[-2]
+    E = ep_space.shape[-1]
+    i32 = jnp.int32
+
+    state_spec = lambda *tail: pl.BlockSpec(
+        (1, 1, *tail), lambda c, r: (c, r) + (0,) * len(tail))
+    chan_spec = lambda *tail: pl.BlockSpec(
+        (1, *tail), lambda c, r: (c,) + (0,) * len(tail))
+    router_spec = lambda *tail: pl.BlockSpec(
+        (1, *tail), lambda c, r: (r,) + (0,) * len(tail))
+
+    arb_pop, granted, chosen, rr2, wh2, in_space = pl.pallas_call(
+        functools.partial(_arb_kernel, depth_out=Dout),
+        grid=(C, R),
+        in_specs=[
+            state_spec(P, Din, NF),  # in_buf
+            state_spec(P),  # in_cnt
+            state_spec(P),  # out_cnt
+            state_spec(P),  # rr_ptr
+            state_spec(P),  # wh_lock
+            router_spec(E),  # route
+        ],
+        out_specs=[
+            state_spec(P),  # arb_pop
+            state_spec(P),  # granted
+            state_spec(P, NF),  # chosen
+            state_spec(P),  # rr_ptr'
+            state_spec(P),  # wh_lock'
+            state_spec(P),  # in_space
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, R, P), jnp.bool_),
+            jax.ShapeDtypeStruct((C, R, P), jnp.bool_),
+            jax.ShapeDtypeStruct((C, R, P, NF), i32),
+            jax.ShapeDtypeStruct((C, R, P), i32),
+            jax.ShapeDtypeStruct((C, R, P), i32),
+            jax.ShapeDtypeStruct((C, R, P), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route)
+
+    # fabric-wide snapshot views (cycle-start state, untouched by kernel 1)
+    out_heads = out_buf[..., 0, :]  # [C, R, P, NF]
+    out_valid = out_cnt > 0  # [C, R, P]
+
+    in2, in_cnt2, out2, out_cnt2 = pl.pallas_call(
+        _apply_kernel,
+        grid=(C, R),
+        in_specs=[
+            state_spec(P, Din, NF),  # in_buf
+            state_spec(P),  # in_cnt
+            state_spec(P, Dout, NF),  # out_buf
+            state_spec(P),  # out_cnt
+            state_spec(P),  # arb_pop
+            state_spec(P),  # granted
+            state_spec(P, NF),  # chosen
+            state_spec(P),  # in_space (own row)
+            chan_spec(R, P, NF),  # out_heads, full fabric
+            chan_spec(R, P),  # out_valid, full fabric
+            chan_spec(R, P),  # in_space, full fabric
+            router_spec(P, 2),  # link_src
+            router_spec(P, 2),  # link_dst
+            router_spec(P),  # port_ep
+            chan_spec(E),  # ep_space
+        ],
+        out_specs=[
+            state_spec(P, Din, NF),
+            state_spec(P),
+            state_spec(P, Dout, NF),
+            state_spec(P),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, R, P, Din, NF), i32),
+            jax.ShapeDtypeStruct((C, R, P), i32),
+            jax.ShapeDtypeStruct((C, R, P, Dout, NF), i32),
+            jax.ShapeDtypeStruct((C, R, P), i32),
+        ],
+        interpret=interpret,
+    )(in_buf, in_cnt, out_buf, out_cnt, arb_pop, granted, chosen, in_space,
+      out_heads, out_valid, in_space, link_src, link_dst, port_ep, ep_space)
+
+    # endpoint deliveries are a pure gather from the cycle-start snapshot
+    er, ep_p = ep_attach[:, 0], ep_attach[:, 1]
+    ep_flit = out_heads[:, er, ep_p]  # [C, E, NF]
+    ep_valid = out_valid[:, er, ep_p] & ep_space
+    return in2, in_cnt2, out2, out_cnt2, rr2, wh2, ep_flit, ep_valid

@@ -1,0 +1,60 @@
+"""Public entry point: one router-fabric cycle, backend-dispatched.
+
+``router_cycle(..., backend="jnp" | "pallas")`` runs one cycle of the
+channel-batched fabric on raw arrays. ``"jnp"`` vmaps the reference
+implementation over the channel axis (the engine's historical hot path);
+``"pallas"`` launches the (C, R)-gridded kernels, interpreted off-TPU (so
+CPU CI exercises the exact kernel dataflow) and compiled on TPU. Both
+backends execute the same decision functions from ``ref.py`` and are
+bit-identical — pinned by ``tests/test_noc_backend.py``.
+
+Caveat: only the interpret path is exercised by CI (this container is
+CPU-only, like the repo's other Pallas kernels). The native TPU lowering
+follows the same ``interpret=None -> auto`` idiom as ``rmsnorm``/``ssd``
+but is not yet covered by a hardware test; pass ``interpret=True``
+explicitly to force the verified path on TPU.
+
+This module is deliberately free of ``repro.core.noc`` imports: the engine
+layers on top of it, not the other way around.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.noc_router.noc_router import router_cycle_pallas
+from repro.kernels.noc_router.ref import router_cycle_reference
+
+BACKENDS = ("jnp", "pallas")
+
+# vmap the single-channel reference over the leading channel axis of the
+# state and the per-channel endpoint ingress space; tables are shared.
+_cycle_jnp = jax.vmap(
+    router_cycle_reference,
+    in_axes=(0, 0, 0, 0, 0, 0, None, None, None, None, None, 0),
+)
+
+
+def _interp(interpret):
+    return (jax.default_backend() != "tpu") if interpret is None else interpret
+
+
+def router_cycle(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+                 route, link_src, link_dst, port_ep, ep_attach, ep_space,
+                 *, backend: str = "jnp", interpret=None):
+    """One cycle of every channel at once on the selected backend.
+
+    State arrays are channel-batched ([C, R, P, ...]); tables are shared
+    ([R, ...] / [E, 2]); ``ep_space`` [C, E]. Returns
+    ``(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+    ep_flit [C, E, NF], ep_valid [C, E])``.
+    """
+    if backend == "jnp":
+        return _cycle_jnp(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+                          route, link_src, link_dst, port_ep, ep_attach,
+                          ep_space)
+    if backend == "pallas":
+        return router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr,
+                                   wh_lock, route, link_src, link_dst,
+                                   port_ep, ep_attach, ep_space,
+                                   interpret=_interp(interpret))
+    raise ValueError(f"unknown router backend {backend!r}; expected one of {BACKENDS}")

@@ -1,0 +1,217 @@
+"""Reference implementation of one FlooNoC router cycle (single channel).
+
+This is the bit-exact specification of the per-cycle router datapath that
+used to live inline in ``repro.core.noc.engine._cycle_one``: cycle-start
+snapshot semantics, round-robin output arbitration, wormhole-lock updates,
+and FIFO push/pop over packed ``[R, P, D, NF]`` flit state.
+
+The decision functions are written **rank-generically over the leading
+router axis**: every operation addresses the port/fifo/field axes by their
+position relative to that leading axis, so the same code runs on
+
+* the full fabric (``R`` = all routers) — the ``backend="jnp"`` engine path,
+  vmapped over channels by ``repro.core.noc.engine``; and
+* a single-router block (``R`` = 1) — inside the Pallas kernel
+  (``repro.kernels.noc_router.noc_router``), gridded over ``(C, R)``.
+
+Because both backends execute these exact functions on the same integer
+state, they are bit-identical by construction; the golden-pin tests in
+``tests/test_noc_backend.py`` verify it end to end.
+
+Cycle semantics contract: arbitration and link decisions are both computed
+from the cycle-start snapshot, then applied. A flit therefore spends >= 1
+cycle in the input buffer and >= 1 cycle in the output buffer: 2 cycles per
+router hop at zero load, matching the paper's Fig. 7.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# packed flit layout: trailing axis of NF int32 fields
+FLIT_FIELDS = ("dst", "src", "kind", "txn", "last", "ts", "meta")
+NF = len(FLIT_FIELDS)
+F_DST, F_SRC, F_KIND, F_TXN, F_LAST, F_TS, F_META = range(NF)
+
+
+def empty_flits(shape) -> jnp.ndarray:
+    """Zeroed packed flit array of shape [*shape, NF]."""
+    return jnp.zeros((*tuple(shape), NF), jnp.int32)
+
+
+def pack_flit(dst, src, kind, txn, last, ts, meta) -> jnp.ndarray:
+    """Pack per-field values (broadcast against dst's shape) into [..., NF]."""
+    ref = jnp.asarray(dst, jnp.int32)
+    parts = [
+        jnp.broadcast_to(jnp.asarray(v, jnp.int32), ref.shape)
+        for v in (ref, src, kind, txn, last, ts, meta)
+    ]
+    return jnp.stack(parts, axis=-1)
+
+
+def fifo_pop(buf: jnp.ndarray, cnt, pop_mask):
+    """Drop the head slot of every FIFO selected by ``pop_mask`` [..., P]."""
+    shifted = jnp.roll(buf, -1, axis=-2)
+    newbuf = jnp.where(pop_mask[..., None, None], shifted, buf)
+    return newbuf, cnt - pop_mask.astype(jnp.int32)
+
+
+def fifo_push(buf: jnp.ndarray, cnt, push_mask, flit: jnp.ndarray):
+    """Append ``flit`` [..., P, NF] at the tail where ``push_mask`` [..., P]."""
+    D = buf.shape[-2]
+    idx = jnp.clip(cnt, 0, D - 1)
+    onehot = jax.nn.one_hot(idx, D, dtype=jnp.bool_) & push_mask[..., None]
+    newbuf = jnp.where(onehot[..., None], flit[..., None, :], buf)
+    return newbuf, cnt + push_mask.astype(jnp.int32)
+
+
+def heads(buf: jnp.ndarray) -> jnp.ndarray:
+    """Head flit of every FIFO: [..., D, NF] -> [..., NF]."""
+    return buf[..., 0, :]
+
+
+class ArbDecisions(NamedTuple):
+    """Per-output-port arbitration results, all computed from the snapshot.
+
+    All leaves carry the [R, P] leading shape of the inputs (R may be a
+    1-sized Pallas block).
+    """
+
+    arb_pop: jnp.ndarray  # [R, P_in] bool: head popped by some output port
+    granted: jnp.ndarray  # [R, P_out] bool: output port granted a flit
+    chosen: jnp.ndarray  # [R, P_out, NF] flit the output port latches
+    rr_ptr: jnp.ndarray  # [R, P_out] updated round-robin pointer
+    wh_lock: jnp.ndarray  # [R, P_out] updated wormhole lock (-1 = free)
+    in_space: jnp.ndarray  # [R, P_in] bool: input FIFO has a free slot after pops
+
+
+def arb_decisions(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
+                  depth_out: int) -> ArbDecisions:
+    """Round-robin output arbitration from the cycle-start snapshot.
+
+    Inputs are single-channel: ``in_buf`` [R, P, Din, NF], counters and
+    pointers [R, P], ``route`` [R, E], ``depth_out`` the output-buffer
+    depth. Each output port picks the lowest-scoring eligible input head
+    (round-robin distance from ``rr_ptr``); eligibility requires a head
+    routed to that port, a free or matching wormhole lock, and
+    output-buffer space (no same-cycle fall-through). A granted tail flit
+    releases the wormhole lock; a granted body flit locks the output to its
+    input port.
+    """
+    P = in_cnt.shape[-1]
+    Din = in_buf.shape[-2]
+
+    h = heads(in_buf)  # [R, P, NF]
+    h_valid = in_cnt > 0
+    req_port = jnp.take_along_axis(route, jnp.clip(h[..., F_DST], 0, None), axis=1)
+    req_port = jnp.where(h_valid, req_port, -1)  # [R, P_in]
+
+    pout = jnp.arange(P)
+    pin = jnp.arange(P)[None, :, None]
+    elig = req_port[:, :, None] == pout[None, None, :]
+    locked = wh_lock[:, None, :]
+    elig &= (locked < 0) | (locked == pin)
+    elig &= (out_cnt < depth_out)[:, None, :]  # no same-cycle fall-through
+
+    score = (pin - rr_ptr[:, None, :]) % P
+    score = jnp.where(elig, score, P + 1)
+    winner = jnp.argmin(score, axis=1)  # [R, P_out]
+    granted = jnp.take_along_axis(score, winner[:, None, :], axis=1)[:, 0, :] <= P
+    win_onehot = jax.nn.one_hot(winner, P, axis=1, dtype=jnp.bool_) & granted[:, None, :]
+    arb_pop = jnp.any(win_onehot, axis=2)  # [R, P_in]
+    chosen = jnp.take_along_axis(h, winner[:, :, None], axis=1)  # [R, P_out, NF]
+
+    rr = jnp.where(granted, (winner + 1) % P, rr_ptr)
+    is_tail = chosen[..., F_LAST] > 0
+    wh = jnp.where(granted & ~is_tail, winner, wh_lock)
+    wh = jnp.where(granted & is_tail, -1, wh)
+
+    # space after this cycle's arb pops (slot freed same cycle is reusable)
+    in_space = (in_cnt - arb_pop.astype(jnp.int32)) < Din
+    return ArbDecisions(arb_pop, granted, chosen, rr, wh, in_space)
+
+
+def link_inputs(out_heads_all, out_valid_all, link_src, in_space):
+    """Link-traversal decisions for this router's *input* side.
+
+    ``out_heads_all`` [R_all, P, NF] / ``out_valid_all`` [R_all, P] are the
+    full-fabric snapshot (every router's output heads); ``link_src`` [R, P, 2]
+    and ``in_space`` [R, P] describe this router block. Returns
+    ``(up_head [R, P, NF], link_accept [R, P])``: the upstream head feeding
+    each input port and whether it is accepted this cycle.
+    """
+    R_all, P = out_valid_all.shape
+    src_r, src_p = link_src[..., 0], link_src[..., 1]
+    have_up = src_r >= 0
+    sr = jnp.clip(src_r, 0, R_all - 1)
+    sp = jnp.clip(src_p, 0, P - 1)
+    up_head = out_heads_all[sr, sp]
+    up_valid = out_valid_all[sr, sp] & have_up
+    return up_head, up_valid & in_space
+
+
+def sent_mask(out_valid, link_dst, port_ep, in_space_all, ep_space):
+    """Which of this router's output heads leave the buffer this cycle.
+
+    A head is sent either over a live link — iff the downstream input FIFO
+    has space after its own arbitration pops (``in_space_all`` [R_all, P]) —
+    or into an attached endpoint (``port_ep`` [R, P], id or -1) iff the
+    endpoint signalled ingress space (``ep_space`` [E]). Both legs reproduce
+    the reference gather/scatter exactly: for a live link (r, p) ->
+    (dst_r, dst_p), downstream ``link_accept`` is
+    ``out_valid[r, p] & in_space_all[dst_r, dst_p]`` because this port *is*
+    the upstream of that input.
+    """
+    R_all, P = in_space_all.shape
+    E = ep_space.shape[0]
+    dst_r, dst_p = link_dst[..., 0], link_dst[..., 1]
+    to_router = dst_r >= 0
+    down_space = in_space_all[jnp.clip(dst_r, 0, R_all - 1), jnp.clip(dst_p, 0, P - 1)]
+    sent_link = to_router & out_valid & down_space
+    has_ep = port_ep >= 0
+    ep_ok = ep_space[jnp.clip(port_ep, 0, E - 1)]
+    sent_ep = has_ep & out_valid & ep_ok
+    return sent_link | sent_ep
+
+
+def apply_cycle(in_buf, in_cnt, out_buf, out_cnt, arb_pop, granted, chosen,
+                link_accept, up_head, sent):
+    """Apply the snapshot decisions: FIFO pops then pushes, per side."""
+    in1, in_cnt1 = fifo_pop(in_buf, in_cnt, arb_pop)
+    in2, in_cnt2 = fifo_push(in1, in_cnt1, link_accept, up_head)
+    out1, out_cnt1 = fifo_pop(out_buf, out_cnt, sent)
+    out2, out_cnt2 = fifo_push(out1, out_cnt1, granted, chosen)
+    return in2, in_cnt2, out2, out_cnt2
+
+
+def router_cycle_reference(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+                           route, link_src, link_dst, port_ep, ep_attach,
+                           ep_space):
+    """One cycle of a single channel over the full fabric (reference).
+
+    All state is single-channel ([R, P, ...]); ``ep_space`` [E] is the
+    endpoint ingress-space mask for this channel. Returns
+    ``(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock, ep_flit [E, NF],
+    ep_valid [E])``. This is the extracted body of the original
+    ``engine._cycle_one`` and the bit-exact specification the Pallas
+    backend is tested against.
+    """
+    arb = arb_decisions(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
+                        depth_out=out_buf.shape[-2])
+
+    out_heads = heads(out_buf)
+    out_valid = out_cnt > 0
+    up_head, link_accept = link_inputs(out_heads, out_valid, link_src,
+                                       arb.in_space)
+    sent = sent_mask(out_valid, link_dst, port_ep, arb.in_space, ep_space)
+
+    in2, in_cnt2, out2, out_cnt2 = apply_cycle(
+        in_buf, in_cnt, out_buf, out_cnt, arb.arb_pop, arb.granted, arb.chosen,
+        link_accept, up_head, sent)
+
+    er, ep_p = ep_attach[:, 0], ep_attach[:, 1]
+    ep_flit = out_heads[er, ep_p]  # [E, NF]
+    ep_valid = out_valid[er, ep_p] & ep_space
+    return in2, in_cnt2, out2, out_cnt2, arb.rr_ptr, arb.wh_lock, ep_flit, ep_valid
