@@ -1,6 +1,14 @@
 """FlooNoC-layer microbench: collectives on the cycle-level fabric
 (measured vs the simulator-calibrated analytical model, multi-stream
-multicast), bucketing overhead, and NoC-aware scheduler picks."""
+multicast), ML-parallelism workloads compiled by ``repro.core.noc.
+ml_traffic`` (``--workload {ddp,tp,moe,pp}``), bucketing overhead, and
+NoC-aware scheduler picks.
+
+Standalone CLI:
+    PYTHONPATH=src python -m benchmarks.collective_bench --workload moe --smoke
+    PYTHONPATH=src python -m benchmarks.collective_bench --workload ddp tp \\
+        --json rows.json
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -8,10 +16,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import row, timed
 from repro.core import collectives as coll
 from repro.core import scheduler as sched
 from repro.core.noc import collective_traffic as CT
+from repro.core.noc import ml_traffic as ML
 from repro.core.noc import sim as S
 from repro.core.noc.params import NocParams
 from repro.core.noc.topology import build_mesh, build_multi_die, build_torus
@@ -47,6 +57,38 @@ def _fabric_collectives(topo, n_cycles: int, configs) -> list[dict]:
     return rows
 
 
+def ml_workload_rows(workload: str, smoke: bool = False,
+                     topology: str = "mesh") -> list[dict]:
+    """Measured-vs-model rows for one compiled ML workload phase.
+
+    Uses the shared demo jobs in ``ml_traffic.DEMO_SPECS`` (one per
+    pattern on the 16-device fabrics); smoke shrinks payloads + cycle
+    budgets only, so the wire patterns stay identical to the full rows.
+    """
+    from repro.configs import get_config
+
+    par_kw, tokens = ML.DEMO_SPECS[workload]
+    topo = build_mesh(nx=4, ny=4) if topology == "mesh" \
+        else build_torus(nx=4, ny=4)
+    cfg = get_config("llama4-scout-17b-a16e").reduced()
+    par = ML.ParallelismSpec(**par_kw)
+    cap = 4.0 if smoke else 16.0
+    phases = ML.compile_traffic(cfg, par, topo, tokens_per_device=tokens,
+                                sim_cap_kb=cap, workloads=[workload])
+    params = NocParams()
+    rows = []
+    for ph in phases:
+        v = ML.validate_phase(topo, ph, params)
+        tag = f"coll/ml/{topo.name}/{ph.name}"
+        rows.append(row(f"{tag}_cycles", 0.0, v["measured"],
+                        target=round(v["model"], 1), rel_tol=0.10))
+        rows.append(row(f"{tag}_delivered", 0.0, int(v["delivered"]),
+                        target=1, rel_tol=0.01))
+        rows.append(row(f"{tag}_step_total_cycles", 0.0,
+                        ML.step_report([ph], params, topo)[0]["total_cycles"]))
+    return rows
+
+
 def bench(full: bool = False, smoke: bool = False) -> list[dict]:
     if smoke:
         # topology axis at toy scale: mesh + one torus + one multi-die
@@ -60,6 +102,8 @@ def bench(full: bool = False, smoke: bool = False) -> list[dict]:
         rows += _fabric_collectives(
             build_multi_die(n_dies=2, nx=2, ny=2, d2d=2), n_cycles=600,
             configs=[("all-gather", dict(data_kb=1))])
+        # the compiled ML workloads run in their own bench-smoke CI step
+        # (collective_bench --workload moe --smoke) to keep this path lean
         return rows
     rows = []
     # ---- collectives on the cycle-level fabric vs calibrated model ----
@@ -117,4 +161,46 @@ def bench(full: bool = False, smoke: bool = False) -> list[dict]:
                        pods=2, compress_pod=False, compute_s=1.0)
     rows.append(row("coll/sched_pod_cost_dominates_uncompressed", 0.0,
                     int(c_raw.pod_s > c_raw.intra_s), target=1, rel_tol=0.01))
+    # ---- ML-parallelism workloads (model config -> fabric traffic) ----
+    for w in ML.WORKLOADS:
+        rows += ml_workload_rows(w)
     return rows
+
+
+def main() -> None:
+    """Standalone --workload CLI (same row format as benchmarks.run)."""
+    import argparse
+    import json
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", nargs="*", default=ML.WORKLOADS,
+                    choices=ML.WORKLOADS,
+                    help="ML communication pattern(s) to run")
+    ap.add_argument("--topology", default="mesh", choices=("mesh", "torus"))
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy payloads, fail on exceptions only")
+    ap.add_argument("--json", default=None, help="write rows to this file")
+    args = ap.parse_args()
+    print(common.CSV_HEADER)
+    all_rows = []
+    failed = []
+    for w in args.workload:
+        for r in ml_workload_rows(w, smoke=args.smoke,
+                                  topology=args.topology):
+            all_rows.append(r)
+            print(common.csv_line(r), flush=True)
+            if r["ok"] is not None and not r["ok"]:
+                failed.append(r["name"])
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "workloads": args.workload,
+                       "rows": all_rows}, f, indent=1, default=str)
+    if failed:
+        print("# failed targets:", ", ".join(failed))
+        if not args.smoke:
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,3 +26,14 @@ def row(name: str, us: float, derived, target=None, rel_tol: float = 0.15,
             ok = derived <= target
     return {"name": name, "us_per_call": round(us, 1), "derived": derived,
             "target": target, "ok": ok}
+
+
+CSV_HEADER = "name,us_per_call,derived,target,ok"
+
+
+def csv_line(r: dict) -> str:
+    """One CSV line per row dict (blank target/ok when unset) — the shared
+    print format of benchmarks.run and the standalone CLIs."""
+    tgt = "" if r["target"] is None else r["target"]
+    ok = "" if r["ok"] is None else r["ok"]
+    return f"{r['name']},{r['us_per_call']},{r['derived']},{tgt},{ok}"

@@ -57,7 +57,9 @@ def main() -> None:
         ("collective_bench", collective_bench),
     ]
 
-    print("name,us_per_call,derived,target,ok")
+    from benchmarks import common
+
+    print(common.CSV_HEADER)
     n_checked = n_ok = 0
     failed = []
     all_rows = []
@@ -75,9 +77,7 @@ def main() -> None:
         row_backend = kwargs.get("backend") or "jnp"
         for r in mod.bench(**kwargs):
             all_rows.append({"module": name, "backend": row_backend, **r})
-            tgt = "" if r["target"] is None else r["target"]
-            ok = "" if r["ok"] is None else r["ok"]
-            print(f"{r['name']},{r['us_per_call']},{r['derived']},{tgt},{ok}", flush=True)
+            print(common.csv_line(r), flush=True)
             if r["ok"] is not None:
                 n_checked += 1
                 n_ok += bool(r["ok"])

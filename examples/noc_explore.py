@@ -10,12 +10,14 @@ Run:  PYTHONPATH=src python examples/noc_explore.py [--pattern uniform]
       PYTHONPATH=src python examples/noc_explore.py --collectives
       PYTHONPATH=src python examples/noc_explore.py --sweep
       PYTHONPATH=src python examples/noc_explore.py --topology torus --collectives
+      PYTHONPATH=src python examples/noc_explore.py --workload moe
 """
 import argparse
 
 import numpy as np
 
 from repro.core.noc import collective_traffic as CT
+from repro.core.noc import ml_traffic as ML
 from repro.core.noc import sim as S
 from repro.core.noc import traffic as T
 from repro.core.noc.params import NocParams
@@ -92,6 +94,38 @@ def collectives_demo(topology: str = "mesh", backend: str = "jnp"):
     order = "snake order" if gridded else "cluster order"
     print(f"  (ring = {n} tiles, {order}; edge hops walked on the routing "
           f"tables, model terms from FabricCollectiveModel.for_topology)")
+
+
+def workload_demo(workload: str, topology: str = "mesh",
+                  backend: str = "jnp"):
+    """One compiled ML-parallelism phase (repro.core.noc.ml_traffic) on the
+    fabric: the training-step traffic of a real model config, measured
+    against the calibrated model. See examples/train_on_fabric.py for the
+    full multi-phase step estimate and docs/WORKLOADS.md for the
+    pipeline."""
+    from repro.configs import get_config
+
+    if topology not in ("mesh", "torus"):
+        raise SystemExit("--workload demos run on mesh or torus")
+    topo = make_topo(topology)
+    cfg = get_config("llama4-scout-17b-a16e").reduced()
+    par_kw, tokens = ML.DEMO_SPECS[workload]  # shared with collective_bench
+    par = ML.ParallelismSpec(**par_kw)
+    phases = ML.compile_traffic(cfg, par, topo, tokens_per_device=tokens,
+                                sim_cap_kb=16, workloads=[workload])
+    params = NocParams(backend=backend)
+    print(f"== {workload} traffic of {cfg.name} on {topo.name} "
+          f"(dp={par.dp} tp={par.tp} pp={par.pp} ep={par.ep}) ==")
+    for ph in phases:
+        v = ML.validate_phase(topo, ph, params)
+        meas, est = v["measured"], v["model"]
+        print(f"  {ph.pattern:11s} measured {meas:5d} cyc   model {est:7.1f} "
+              f"cyc ({(est - meas) / max(meas, 1):+5.1%})   "
+              f"delivered={'yes' if v['delivered'] else 'NO'}")
+        print(f"  {ph.note}")
+        r = ML.step_report([ph], params, topo)[0]
+        print(f"  full step: {r['count']}x {r['data_kb']} kB -> "
+              f"{r['total_cycles']:.0f} cyc = {r['us_per_step']} us")
 
 
 def sweep_demo(topology: str = "mesh", backend: str = "jnp"):
@@ -200,6 +234,9 @@ if __name__ == "__main__":
                          "the default demos")
     ap.add_argument("--collectives", action="store_true",
                     help="run the collectives-on-fabric demo")
+    ap.add_argument("--workload", default=None, choices=ML.WORKLOADS,
+                    help="run one compiled ML-parallelism phase "
+                         "(ddp/tp/moe/pp) on the fabric")
     ap.add_argument("--sweep", action="store_true",
                     help="run the vmapped multi-config sweep demo")
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
@@ -209,6 +246,8 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.channels:
         channel_sweep(args.channels, args.pattern, backend=args.backend)
+    elif args.workload:
+        workload_demo(args.workload, args.topology, backend=args.backend)
     elif args.collectives:
         collectives_demo(args.topology, backend=args.backend)
     elif args.sweep:

@@ -1,0 +1,99 @@
+"""Estimate one training step's communication cycles on the NoC fabric.
+
+Compiles a real model config from ``repro.configs`` plus a parallelism
+spec (dp / tp / ep / pp) into per-phase collective schedules
+(``repro.core.noc.ml_traffic``), prices every phase with the
+simulator-calibrated analytical model at the TRUE byte sizes, and — for
+validation — replays each phase's wire pattern on the cycle-accurate
+simulator at a capped payload so the run finishes in seconds.
+
+Run:  PYTHONPATH=src python examples/train_on_fabric.py
+      PYTHONPATH=src python examples/train_on_fabric.py --arch deepseek-v2-236b
+      PYTHONPATH=src python examples/train_on_fabric.py --dp 4 --tp 2 --pp 2
+      PYTHONPATH=src python examples/train_on_fabric.py --topology torus
+      PYTHONPATH=src python examples/train_on_fabric.py --smoke
+"""
+import argparse
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.core.noc import ml_traffic as ML
+from repro.core.noc.params import NocParams
+from repro.core.noc.topology import build_mesh, build_torus
+
+
+def run_one(topo, cfg, par, tokens_per_device, *, sim_cap_kb, backend,
+            simulate=True):
+    """Compile + price one training step on one topology; print a table."""
+    params = NocParams(backend=backend)
+    phases = ML.compile_traffic(cfg, par, topo,
+                                tokens_per_device=tokens_per_device,
+                                sim_cap_kb=sim_cap_kb)
+    report = ML.step_report(phases, params, topo)
+    print(f"\n== {cfg.name} on {topo.name}: dp={par.dp} tp={par.tp} "
+          f"pp={par.pp} ep={par.ep} mb={par.microbatches}, "
+          f"{tokens_per_device} tokens/device ==")
+    print(f"  {'phase':5s} {'pattern':11s} {'count':>5s} {'kB/inv':>10s} "
+          f"{'cyc/inv':>12s} {'total cyc':>14s} {'us/step':>9s}")
+    for r in report:
+        print(f"  {r['phase']:5s} {r['pattern']:11s} {r['count']:5d} "
+              f"{r['data_kb']:10.1f} {r['cycles_per_invocation']:12.1f} "
+              f"{r['total_cycles']:14.1f} {r['us_per_step']:9.2f}")
+    total = sum(r["total_cycles"] for r in report)
+    us = sum(r["us_per_step"] for r in report)
+    print(f"  {'TOTAL':5s} {'':11s} {'':5s} {'':10s} {'':12s} "
+          f"{total:14.1f} {us:9.2f}")
+    if not simulate:
+        return report
+    print("  validation at sim scale (payload capped at "
+          f"{sim_cap_kb:g} kB):")
+    for ph in phases:
+        v = ML.validate_phase(topo, ph, params)
+        meas, est = v["measured"], v["model"]
+        print(f"    {ph.name:5s} measured {meas:6d} cyc   model {est:8.1f} "
+              f"cyc ({(est - meas) / max(meas, 1):+5.1%})   "
+              f"delivered={'yes' if v['delivered'] else 'NO'}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama4-scout-17b-a16e",
+                    choices=list_archs())
+    ap.add_argument("--shape", default="train_4k", choices=sorted(SHAPES))
+    ap.add_argument("--dp", type=int, default=2)
+    ap.add_argument("--tp", type=int, default=4)
+    ap.add_argument("--pp", type=int, default=2)
+    ap.add_argument("--ep", type=int, default=2)
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--topology", default=None, choices=("mesh", "torus"),
+                    help="run one topology only (default: both)")
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"))
+    ap.add_argument("--no-sim", action="store_true",
+                    help="analytical table only, skip the validation runs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy scale: reduced config, tiny payload cap")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    if args.smoke:
+        cfg = cfg.reduced()
+    par = ML.ParallelismSpec(dp=args.dp, tp=args.tp, pp=args.pp, ep=args.ep,
+                             microbatches=args.microbatches)
+    # data parallelism shards the global batch; every pipeline stage sees
+    # all of its data rank's tokens (microbatched)
+    tokens_per_device = shape.seq_len * max(shape.global_batch // par.dp, 1)
+    if args.smoke:
+        tokens_per_device = min(tokens_per_device, 4096)
+    cap = 4.0 if args.smoke else 32.0
+    # 16 devices fit the demo fabrics; the torus wants degrees matching its
+    # grid so the strided data-parallel rings stay neighbor-hop (wrap-safe)
+    topos = {"mesh": build_mesh(nx=4, ny=4), "torus": build_torus(nx=4, ny=4)}
+    names = [args.topology] if args.topology else ["mesh", "torus"]
+    for name in names:
+        run_one(topos[name], cfg, par, tokens_per_device, sim_cap_kb=cap,
+                backend=args.backend, simulate=not args.no_sim)
+
+
+if __name__ == "__main__":
+    main()

@@ -246,7 +246,8 @@ class FabricCollectiveModel:
         return max(streams * beats,
                    beats + self.hop_cycles * hops + self.issue_cycles)
 
-    def pipelined_ring_cycles(self, beats: int, paths, streams: int = 1) -> float:
+    def pipelined_ring_cycles(self, beats: int, paths, streams: int = 1,
+                              occupancy: float = 1.0) -> float:
         """Completion time of a pipelined ring phase.
 
         ``paths``: [n_chunks, n_steps] router traversals of the edge each
@@ -258,17 +259,145 @@ class FabricCollectiveModel:
         ``(streams - 1) * beats`` serializer stagger — NOT a full
         ``streams * beats`` pace slot, which matters on serializer-bound
         uniform rings (e.g. a multi-stream torus ring, where every edge is
-        a wrap-free unit hop)."""
+        a wrap-free unit hop).
+
+        ``occupancy`` > 1 models wormhole link sharing with concurrent
+        traffic outside this ring (``collective_traffic.merge_disjoint``
+        computes it from the merged groups' route-link sets): every pace
+        slot stretches to ``occupancy * streams * beats`` because the
+        shared link must also carry the other groups' bursts."""
         paths = np.asarray(paths)
         if paths.size == 0:  # zero-step phase (e.g. a 1-wide ring): no traffic
             return 0.0
         per_edge = np.maximum(
-            streams * beats,
+            occupancy * streams * beats,
             beats + self.hop_cycles * paths + self.issue_cycles)
-        last = beats + self.hop_cycles * paths[:, -1] + self.issue_cycles
+        last = beats + self.hop_cycles * paths[:, -1] + self.issue_cycles \
+            + (occupancy - 1.0) * streams * beats
         per_chunk = (per_edge[:, :-1].sum(axis=1)
                      + (streams - 1) * beats + last)
         return float(per_chunk.max())
+
+    def rotation_all_to_all_cycles(self, beats: int, hop_mat, cong_mat=None,
+                                   block_mat=None, streams: int = 1,
+                                   occupancy: float = 1.0) -> float:
+        """Completion time of a lockstep-rotation (direct) all-to-all.
+
+        ``hop_mat[i, k]`` is the router-traversal count of the edge ring
+        position i crosses at step k (it sends directly to position
+        ``i + k + 1``); ``cong_mat[i, k]`` counts *other* bursts sharing
+        the most-loaded single link of that route in the same step, and
+        ``block_mat[i, k]`` counts the distinct other bursts whose route
+        shares *any* link with it (a wormhole burst can wait behind a
+        different blocker at each shared link, so the true serialization
+        sits between the two counts — calibration against the 4x4 mesh
+        grid puts it halfway).
+
+        The lockstep gate couples every position within a few steps, so
+        the completion sums per-step maxima: each step costs the larger of
+        the wormhole throughput term
+        ``(1 + cong + (block - cong) / 2) * streams * beats`` and the
+        RoB-less round-trip term ``beats + 2 * hop_cycles * hops +
+        rt_cycles`` (every step retargets the stream's TxnID, so a stream
+        cannot issue step k+1 before its step-k B response returned); the
+        final step pays only the one-way arrival. A congestion-free
+        per-position recurrence over the gate/serializer/NI constraints
+        is kept as a floor for small fabrics where no link is shared."""
+        hop_mat = np.asarray(hop_mat, np.float64)
+        n, K = hop_mat.shape
+        if K == 0 or n < 2:
+            return 0.0
+        cong = (np.zeros_like(hop_mat) if cong_mat is None
+                else np.asarray(cong_mat, np.float64))
+        block = cong if block_mat is None else np.asarray(block_mat, np.float64)
+        eff = 1.0 + cong + 0.5 * (block - cong)  # wormhole occupancy factor
+        total = 0.0
+        for k in range(K):
+            thr = occupancy * eff[:, k].max() * streams * beats
+            hmx = hop_mat[:, k].max()
+            if k < K - 1:
+                lat = beats + 2 * self.hop_cycles * hmx + self.rt_cycles
+            else:  # last step completes on arrival, not on the B response
+                lat = (streams - 1) * beats + beats + self.hop_cycles * hmx
+            total += max(thr, lat + self.issue_cycles)
+        # congestion-free floor: per-position gate/serializer/NI recurrence
+        send = np.zeros((n,), np.float64)
+        for k in range(K):
+            arrive = send + beats + self.hop_cycles * hop_mat[:, k]
+            bresp = send + beats + 2 * self.hop_cycles * hop_mat[:, k] \
+                + self.rt_cycles
+            if k + 1 < K:
+                # source of position i at step k is position i - (k + 1)
+                send = np.maximum(send + streams * beats,
+                                  np.maximum(np.roll(arrive, k + 1), bresp))
+        floor = (send + (streams - 1) * beats + beats
+                 + self.hop_cycles * hop_mat[:, -1]).max()
+        return float(max(total, floor))
+
+    def ring_all_to_all_cycles(self, step_beats, edge_hops,
+                               streams: int = 1,
+                               occupancy: float = 1.0) -> float:
+        """Completion time of a store-and-forward ring all-to-all.
+
+        ``step_beats[k]`` is the shrinking per-step burst size (step k
+        forwards the chunks that still have to travel) and ``edge_hops[i]``
+        the router traversals of ring position i's successor edge. The
+        destination never changes, so rounds pipeline at the serializer
+        rate; the recurrence mirrors the ring collectives: step k+1 at a
+        position starts when its own serializer drained and its
+        predecessor's step-k burst arrived."""
+        step_beats = np.asarray(step_beats, np.float64)
+        edge_hops = np.asarray(edge_hops, np.float64)
+        K = len(step_beats)
+        n = len(edge_hops)
+        if K == 0 or n < 2:
+            return 0.0
+        send = np.zeros((n,), np.float64)
+        for k in range(K - 1):
+            arrive = send + step_beats[k] + self.hop_cycles * edge_hops \
+                + self.issue_cycles
+            pred_arrive = np.roll(arrive, 1)  # position i's predecessor is i-1
+            send = np.maximum(send + occupancy * streams * step_beats[k],
+                              pred_arrive)
+        last = send + (streams - 1) * step_beats[-1] + step_beats[-1] \
+            + self.hop_cycles * edge_hops + self.issue_cycles \
+            + (occupancy - 1.0) * streams * step_beats[-1]
+        return float(last.max())
+
+    def pipeline_chain_cycles(self, beats: int, chains_hops, rounds: int,
+                              streams: int = 1, chains_cong=None) -> float:
+        """Completion time of relay-gated point-to-point pipeline chains.
+
+        ``chains_hops`` is a list of per-chain edge hop lists (stage j ->
+        stage j+1 router traversals). Every stage keeps one destination, so
+        the RoB-less NI never stalls (same-destination writes pipeline) and
+        the chain paces at the head's serializer rate ``streams * beats``;
+        round r at a relay is gated on round r having *arrived* from
+        upstream. The recurrence
+        ``send[j][r] = max(send[j-1][r] + beats + hop_cycles * h_j,
+        send[j][r-1] + streams * beats)`` therefore collapses to the
+        classic pipeline bound — fill (one latency term per edge) plus
+        ``rounds - 1`` pace slots, with the ``(streams - 1) * beats``
+        serializer stagger paid once on the final arrival.
+
+        ``chains_cong`` (same shape as ``chains_hops``) counts the other
+        chain edges each edge shares a link with — concurrent stages of a
+        stacked pipeline serialize their bursts through shared links, so
+        a chain's pace slot stretches to the bottleneck-edge occupancy
+        ``(1 + cong) * streams * beats``."""
+        best = 0.0
+        if chains_cong is None:
+            chains_cong = [[0] * len(h) for h in chains_hops]
+        for hops, congs in zip(chains_hops, chains_cong):
+            if not hops or rounds <= 0:
+                continue
+            pace = max((1 + c) * streams * beats for c in congs)
+            fill = sum(beats + self.hop_cycles * h + self.issue_cycles
+                       + c * streams * beats
+                       for h, c in zip(hops, congs))
+            best = max(best, (rounds - 1) * pace
+                       + (streams - 1) * beats + fill)
+        return best
 
     def serial_unicast_cycles(self, beats: int, hop_lists) -> float:
         """Software multicast: one root pushes a chunk to each destination,

@@ -4,8 +4,10 @@ Public surface: :class:`NocParams` (microarchitecture + channel count +
 router compute backend), :class:`Topology` and the ``build_*`` topology-zoo
 builders behind :func:`build_topology`, with the full-system simulator in
 ``repro.core.noc.sim`` (``build_sim`` / ``run`` / ``run_trace`` /
-``run_sweep``) and workload builders in ``repro.core.noc.traffic`` /
-``collective_traffic``. See ``src/repro/core/noc/README.md`` and
+``run_sweep``), workload builders in ``repro.core.noc.traffic`` /
+``collective_traffic``, and the ML-parallelism traffic compiler in
+``repro.core.noc.ml_traffic`` (DDP / TP / MoE / PP phases — see
+``docs/WORKLOADS.md``). See ``src/repro/core/noc/README.md`` and
 ``docs/ARCHITECTURE.md`` for the paper-to-code map.
 """
 from repro.core.noc.params import NocParams

@@ -3,12 +3,20 @@
 The follow-on FlooNoC work (Colagrande et al.) carries ML collectives on the
 same wide physical links the paper built for bulk DMA. This module compiles
 all-gather / reduce-scatter / all-reduce (1-D ring and 2-D dimension-ordered
-ring), software multicast and barrier into multi-stream DMA ``Workload``
-programmes: each ring step becomes one wide write burst whose issue is gated
-on the *receipt* of the previous step's chunk (``Workload.dma_dst_seq`` /
-``dma_gate`` / ``dma_beats_seq``, see endpoints.py), so the simulator
-reproduces the real pipeline skew, serialization and wormhole behaviour of a
-collective instead of an open-loop traffic pattern.
+ring), software multicast, barrier, personalized all-to-all (direct
+rotation, or a torus-safe store-and-forward ring) and relay-gated p2p
+pipeline chains into multi-stream DMA ``Workload`` programmes: each step
+becomes one wide write burst whose issue is gated on the *receipt* of a
+prior step's chunk (``Workload.dma_dst_seq`` / ``dma_gate`` /
+``dma_beats_seq``, see endpoints.py), so the simulator reproduces the real
+pipeline skew, serialization and wormhole behaviour of a collective instead
+of an open-loop traffic pattern.
+
+Ring builders take an ``order`` that may be a *subset* of the tiles (a
+parallelism group's ring) and ``merge_disjoint`` fuses disjoint groups
+into one concurrent schedule; ``repro.core.noc.ml_traffic`` builds on
+that to compile whole training-step phases (DDP / TP / MoE / PP — see
+docs/WORKLOADS.md).
 
 Streams split the data: with S streams every tile runs S independent ring
 pipelines under distinct TxnIDs (the paper's multi-stream DMA), which both
@@ -49,7 +57,7 @@ from repro.core.noc.params import NocParams
 from repro.core.noc.topology import Topology
 
 COLLECTIVES = ["all-gather", "reduce-scatter", "all-reduce", "all-reduce-2d",
-               "multicast", "barrier"]
+               "multicast", "barrier", "all-to-all", "p2p"]
 
 
 @dataclass(frozen=True)
@@ -157,11 +165,11 @@ def _ring_schedule(topo: Topology, name: str, laps_steps: int, beats: int,
     """Common body of the 1-D ring collectives: every tile sends `beats` to
     its ring successor at each of `laps_steps` steps, step k gated on k
     received bursts (the chunk forwarded at step k is the one received at
-    step k-1)."""
+    step k-1). ``order`` may be a subset of the tiles (a parallelism
+    group's ring); non-members stay idle."""
     E = topo.n_endpoints
     order = ring_order(topo) if order is None else np.asarray(order, np.int32)
-    n = len(order)
-    succ = np.empty((n,), np.int32)
+    succ = np.full((E,), -1, np.int32)
     succ[order] = np.roll(order, -1)  # succ[tile] = next tile on the ring
     dst, gate, bts = _empty(E, streams, laps_steps)
     k = np.arange(laps_steps, dtype=np.int32)
@@ -182,10 +190,15 @@ def _ring_schedule(topo: Topology, name: str, laps_steps: int, beats: int,
     )
 
 
+def _ring_n(topo: Topology, order) -> int:
+    """Ring length: the whole fabric by default, else the given group."""
+    return topo.meta["n_tiles"] if order is None else len(order)
+
+
 def all_gather(topo: Topology, *, data_kb: float = 16, streams: int = 1,
                order: np.ndarray | None = None) -> CollectiveSchedule:
     """Ring all-gather: N-1 steps, each moving one node's chunk onward."""
-    n = topo.meta["n_tiles"]
+    n = _ring_n(topo, order)
     beats = _beats_of(data_kb, n * streams)
     return _ring_schedule(topo, "all-gather", n - 1, beats, streams, order)
 
@@ -194,7 +207,7 @@ def reduce_scatter(topo: Topology, *, data_kb: float = 16, streams: int = 1,
                    order: np.ndarray | None = None) -> CollectiveSchedule:
     """Ring reduce-scatter: same wire pattern as all-gather (the reduction
     itself is local compute, modeled as free against the wide transfers)."""
-    n = topo.meta["n_tiles"]
+    n = _ring_n(topo, order)
     beats = _beats_of(data_kb, n * streams)
     return _ring_schedule(topo, "reduce-scatter", n - 1, beats, streams, order)
 
@@ -203,7 +216,7 @@ def all_reduce(topo: Topology, *, data_kb: float = 16, streams: int = 1,
                order: np.ndarray | None = None) -> CollectiveSchedule:
     """Ring all-reduce = reduce-scatter + all-gather: 2(N-1) steps of
     data/N-sized chunks."""
-    n = topo.meta["n_tiles"]
+    n = _ring_n(topo, order)
     beats = _beats_of(data_kb, n * streams)
     return _ring_schedule(topo, "all-reduce", 2 * (n - 1), beats, streams, order)
 
@@ -293,16 +306,289 @@ def barrier(topo: Topology, *, streams: int = 1,
             order: np.ndarray | None = None) -> CollectiveSchedule:
     """Barrier as a 1-beat ring all-gather: after N-1 gated steps every tile
     has heard from every other."""
-    n = topo.meta["n_tiles"]
+    n = _ring_n(topo, order)
     sched = _ring_schedule(topo, "barrier", n - 1, 1, streams, order)
     return sched
+
+
+def _route_links(topo: Topology, port_ep: np.ndarray, src: int,
+                 dst: int) -> list:
+    """(router, out-port) links an src -> dst transfer occupies, walked on
+    the routing tables (the wormhole-contention unit: two bursts sharing any
+    one of these serialize behind each other)."""
+    links = []
+    cur = int(topo.ep_attach[src][0])
+    for _ in range(10 * topo.n_routers):
+        p = int(topo.route[cur, dst])
+        links.append((cur, p))
+        if port_ep[cur, p] == dst:
+            return links
+        cur = int(topo.link_to[cur, p][0])
+        assert cur >= 0, "route leads off fabric"
+    raise AssertionError("routing loop")
+
+
+def all_to_all(topo: Topology, *, data_kb: float = 16, streams: int = 1,
+               order: np.ndarray | None = None,
+               algo: str = "auto") -> CollectiveSchedule:
+    """All-to-all personalized exchange (the MoE dispatch/combine pattern).
+
+    Every participating tile exchanges a distinct ``data_kb / n`` chunk
+    with every other tile. Two algorithms:
+
+    * ``"direct"`` — lockstep rotation: at step k, ring position i sends
+      its chunk straight to position ``i + k + 1`` (mod n); each step is
+      a shift permutation, each tile receives exactly one burst per step,
+      and step k+1 is gated on k+1 received bursts, so one permutation is
+      in flight at a time. Every step retargets the stream's TxnID, so the
+      RoB-less NI serializes a stream's steps over full B-response round
+      trips (the effect multi-stream multicast escapes). Requires
+      cycle-free routing (mesh / multi-die XY, Occamy's up-down tree).
+    * ``"ring"`` — store-and-forward neighbor exchange: at step k every
+      tile sends its ring successor one burst carrying the ``n - 1 - k``
+      chunks that still have to travel, keeping the one addressed to it.
+      Every send is a single ring edge terminating at an endpoint, so no
+      multi-hop wormhole cycle can form — this is the variant that is
+      safe on a torus, whose wrap links close cyclic channel dependencies
+      the VC-less fabric cannot break (``meta["wrap"]``); the fixed
+      successor also never retargets the TxnID.
+
+    ``"auto"`` picks ``"ring"`` on wrap topologies and ``"direct"``
+    elsewhere. ``meta`` carries the analytical inputs, walked on the
+    routing tables: ``hop_mat[i, k]`` + per-step link-sharing
+    ``cong_mat[i, k]`` for direct, per-step beats + ring-edge hops for
+    ring.
+    """
+    E = topo.n_endpoints
+    order = ring_order(topo) if order is None else np.asarray(order, np.int32)
+    n = len(order)
+    if algo == "auto":
+        algo = "ring" if topo.meta.get("wrap") else "direct"
+    K = max(n - 1, 0)
+    chunk = _beats_of(data_kb, n * streams)
+    txns = np.zeros((E, streams), np.int32)
+    txns[order] = K
+    expect = np.zeros((E, streams), np.int32)
+    expect[order] = K  # one burst in per step
+    k_arr = np.arange(K, dtype=np.int32)
+    if algo == "ring":
+        dst, gate, bts = _empty(E, streams, max(K, 1))
+        step_beats = (n - 1 - k_arr) * chunk  # chunks still travelling
+        for i, tile in enumerate(order):
+            dst[tile, :, :K] = order[(i + 1) % n]
+            gate[tile, :, :K] = k_arr[None, :]
+            bts[tile, :, :K] = step_beats[None, :]
+        hops = _ring_hops(topo, order)
+        return CollectiveSchedule(
+            name="all-to-all", dst_seq=dst, gate=gate, beats_seq=bts,
+            txns=txns, expect_rx=expect, phases=(), model="a2a-ring",
+            meta={"order": order, "chunk": chunk, "step_beats": step_beats,
+                  "edge_hops": hops, "algo": algo},
+        )
+    if algo != "direct":
+        raise ValueError(f"all_to_all: unknown algo {algo!r}")
+    beats = chunk
+    dst, gate, bts = _empty(E, streams, max(K, 1))
+    hop_mat = np.zeros((n, max(K, 1)), np.int32)
+    port_ep = topo.port_ep
+    links_of = {}  # (src, dst) -> link list, cached across steps
+    cong_mat = np.zeros((n, max(K, 1)), np.int32)
+    for i, tile in enumerate(order):
+        peers = order[(i + 1 + k_arr) % n]
+        dst[tile, :, :K] = peers[None, :]
+        gate[tile, :, :K] = k_arr[None, :]
+        bts[tile, :, :K] = beats
+        for k in range(K):
+            route = _route_links(topo, port_ep, int(tile), int(peers[k]))
+            links_of[(int(tile), int(peers[k]))] = route
+            hop_mat[i, k] = len(route)  # one link per router traversal
+    block_mat = np.zeros((n, max(K, 1)), np.int32)
+    for k in range(K):
+        load: dict = {}
+        sets = [frozenset(links_of[(int(t), int(order[(i + 1 + k) % n]))])
+                for i, t in enumerate(order)]
+        for mine in sets:
+            for ln in mine:
+                load[ln] = load.get(ln, 0) + 1
+        for i in range(n):
+            cong_mat[i, k] = max(load[ln] for ln in sets[i]) - 1
+            block_mat[i, k] = sum(1 for j in range(n)
+                                  if j != i and sets[i] & sets[j])
+    return CollectiveSchedule(
+        name="all-to-all", dst_seq=dst, gate=gate, beats_seq=bts, txns=txns,
+        expect_rx=expect, phases=(), model="a2a-rotation",
+        meta={"order": order, "beats": beats, "hop_mat": hop_mat,
+              "cong_mat": cong_mat, "block_mat": block_mat, "algo": algo},
+    )
+
+
+def default_p2p_pairs(topo: Topology,
+                      order: np.ndarray | None = None) -> list:
+    """One pipeline chain over the whole fabric: ring position i feeds
+    position i + 1 (no wrap) — the shape of pipeline-parallel stages."""
+    order = ring_order(topo) if order is None else np.asarray(order, np.int32)
+    return [(int(a), int(b)) for a, b in zip(order[:-1], order[1:])]
+
+
+def p2p(topo: Topology, pairs=None, *, data_kb: float = 16, rounds: int = 4,
+        streams: int = 1) -> CollectiveSchedule:
+    """Relay-gated point-to-point chains (pipeline-parallel activations).
+
+    ``pairs`` is a list of directed ``(src, dst)`` tile edges forming
+    disjoint chains: each tile sends to at most one successor and receives
+    from at most one predecessor, and no edge set may close a cycle (a
+    cycle of relay gates deadlocks; rejected here). Every source sends
+    ``rounds`` bursts of ``data_kb`` (split over ``streams``) to its fixed
+    successor; a tile with a predecessor forwards round r only once round
+    r has *arrived* (gate = r), so the schedule reproduces real pipeline
+    fill/drain skew. Destinations never change, so the RoB-less NI
+    pipelines rounds back-to-back — the pattern paces at the serializer
+    rate, not the B-response round trip.
+
+    Default ``pairs``: one chain along ``ring_order`` (snake), i.e. the
+    whole fabric as one pipeline.
+    """
+    E = topo.n_endpoints
+    if pairs is None:
+        pairs = default_p2p_pairs(topo)
+    pairs = [(int(a), int(b)) for a, b in pairs]
+    srcs = [a for a, _ in pairs]
+    dsts = [b for _, b in pairs]
+    if len(set(srcs)) != len(srcs):
+        raise ValueError("p2p: a tile may send to at most one successor")
+    if len(set(dsts)) != len(dsts):
+        raise ValueError("p2p: a tile may receive from at most one "
+                         "predecessor (relay gates count bursts blindly)")
+    succ = dict(pairs)
+    has_pred = set(dsts)
+    # reject cycles: a cycle of relay gates (every member waiting for its
+    # predecessor's round) never fires its first round
+    heads = [a for a in srcs if a not in has_pred]
+    reached: set = set()
+    chains_hops = []
+    chains_edges = []
+    port_ep = topo.port_ep
+    for h in heads:
+        hops = []
+        edges = []
+        cur = h
+        while cur in succ:
+            nxt = succ[cur]
+            route = _route_links(topo, port_ep, cur, nxt)
+            hops.append(len(route))  # one link per router traversal
+            edges.append(frozenset(route))
+            reached.add(cur)
+            cur = nxt
+        chains_hops.append(hops)
+        chains_edges.append(edges)
+    if len(reached) != len(srcs):
+        raise ValueError("p2p: pairs close a cycle (relay gates deadlock)")
+    # wormhole link sharing between concurrently-pumping stages (all edges
+    # of all chains are busy at once in steady state): per edge, count the
+    # other edges whose route shares a link
+    flat = [e for es in chains_edges for e in es]
+    chains_cong = [
+        [sum(1 for other in flat if other is not mine and mine & other)
+         for mine in es]
+        for es in chains_edges
+    ]
+    beats = _beats_of(data_kb, streams)
+    K = max(rounds, 1)
+    dst, gate, bts = _empty(E, streams, K)
+    txns = np.zeros((E, streams), np.int32)
+    expect = np.zeros((E, streams), np.int32)
+    r_arr = np.arange(rounds, dtype=np.int32)
+    for a, b in pairs:
+        dst[a, :, :rounds] = b
+        # a relay forwards round r only once round r arrived: r+1 bursts
+        gate[a, :, :rounds] = (r_arr[None, :] + 1) if a in has_pred else 0
+        bts[a, :, :rounds] = beats
+        txns[a, :] = rounds
+        expect[b, :] = rounds
+    return CollectiveSchedule(
+        name="p2p", dst_seq=dst, gate=gate, beats_seq=bts, txns=txns,
+        expect_rx=expect, phases=(), model="p2p-chains",
+        meta={"pairs": pairs, "beats": beats, "rounds": rounds,
+              "chains_hops": chains_hops, "chains_cong": chains_cong},
+    )
+
+
+def _sched_links(topo: Topology, port_ep: np.ndarray,
+                 sched: CollectiveSchedule) -> set:
+    """(router, out-port) links any transfer of a schedule traverses."""
+    es, ss, ks = np.nonzero(sched.dst_seq >= 0)  # dst_seq is [E, S, K]
+    pairs = {(int(e), int(sched.dst_seq[e, s, k]))
+             for e, s, k in zip(es, ss, ks)}
+    links: set = set()
+    for src, dst in pairs:
+        links.update(_route_links(topo, port_ep, src, dst))
+    return links
+
+
+def merge_disjoint(topo: Topology, scheds: list) -> CollectiveSchedule:
+    """Merge schedules over *disjoint* tile groups into one concurrent
+    schedule (e.g. every tensor-parallel group's ring in one Workload).
+
+    All members must share the model type, stream count, step count and
+    per-step beat structure (the compiler builds symmetric groups, so this
+    holds by construction); participating endpoint sets must be disjoint
+    (gates count received bursts blindly, so cross-group traffic at a
+    shared endpoint would corrupt the gate semantics). The member
+    schedules ride along in ``meta["group_scheds"]`` and
+    ``analytical_cycles`` prices the merge as the slowest group; each
+    member gets a ``meta["occupancy"]`` factor — the largest number of
+    groups sharing one of its route links, walked on the routing tables —
+    so cross-group wormhole serialization (e.g. two data-parallel rings
+    sharing a mesh row) is priced too."""
+    if len(scheds) == 1:
+        return scheds[0]
+    ref = scheds[0]
+    assert all(s.model == ref.model and s.n_streams == ref.n_streams
+               and s.n_steps == ref.n_steps for s in scheds), \
+        "merge_disjoint: members must share model/stream/step structure"
+    active = [np.flatnonzero(s.txns.sum(axis=1) + s.expect_rx.sum(axis=1))
+              for s in scheds]
+    allc = np.concatenate(active)
+    assert len(np.unique(allc)) == len(allc), \
+        "merge_disjoint: endpoint groups must be disjoint"
+    dst = np.full_like(ref.dst_seq, -1)
+    gate = np.zeros_like(ref.gate)
+    bts = np.zeros_like(ref.beats_seq)
+    txns = np.zeros_like(ref.txns)
+    expect = np.zeros_like(ref.expect_rx)
+    for s in scheds:
+        sel = s.dst_seq != -1
+        dst = np.where(sel, s.dst_seq, dst)
+        gate = gate + s.gate
+        bts = np.where(sel, s.beats_seq, bts)
+        txns = txns + s.txns
+        expect = expect + s.expect_rx
+    # cross-group wormhole contention: how many groups ride each link
+    port_ep = topo.port_ep
+    link_sets = [_sched_links(topo, port_ep, s) for s in scheds]
+    load: dict = {}
+    for ls in link_sets:
+        for ln in ls:
+            load[ln] = load.get(ln, 0) + 1
+    priced = tuple(
+        dataclasses.replace(
+            s, meta={**s.meta,
+                     "occupancy": float(max((load[ln] for ln in ls),
+                                            default=1))})
+        for s, ls in zip(scheds, link_sets))
+    return CollectiveSchedule(
+        name=ref.name, dst_seq=dst, gate=gate, beats_seq=bts, txns=txns,
+        expect_rx=expect, phases=(), model=ref.model,
+        meta={"group_scheds": priced},
+    )
 
 
 def build(topo: Topology, name: str, **kw) -> CollectiveSchedule:
     """Build a named collective schedule (see ``COLLECTIVES``) on ``topo``."""
     builders = {"all-gather": all_gather, "reduce-scatter": reduce_scatter,
                 "all-reduce": all_reduce, "all-reduce-2d": all_reduce_2d,
-                "multicast": multicast, "barrier": barrier}
+                "multicast": multicast, "barrier": barrier,
+                "all-to-all": all_to_all, "p2p": p2p}
     return builders[name](topo, **kw)
 
 
@@ -365,15 +651,38 @@ def analytical_cycles(sched: CollectiveSchedule, params: NocParams,
     Pass ``topo`` to use the per-topology model terms
     (``FabricCollectiveModel.for_topology``); the schedule's edge-hop paths
     already price the topology's links via ``Topology.hops``."""
+    if "group_scheds" in sched.meta:
+        # disjoint groups run concurrently: completion is the slowest group
+        # (per-group link contention is already in each group's meta; the
+        # merge assumes groups share no links, which the compiler's
+        # row/column placements satisfy)
+        return max(analytical_cycles(s, params, topo)
+                   for s in sched.meta["group_scheds"])
     model = (FabricCollectiveModel.for_topology(topo, params)
              if topo is not None
              else FabricCollectiveModel.from_noc_params(params))
     S = sched.n_streams
+    occ = float(sched.meta.get("occupancy", 1.0))
     if sched.model == "serial-unicast":
         return model.serial_unicast_cycles(sched.meta["beats"],
                                            sched.meta["hop_lists"])
+    if sched.model == "a2a-rotation":
+        return model.rotation_all_to_all_cycles(
+            sched.meta["beats"], sched.meta["hop_mat"],
+            sched.meta["cong_mat"], sched.meta.get("block_mat"), streams=S,
+            occupancy=occ)
+    if sched.model == "a2a-ring":
+        return model.ring_all_to_all_cycles(
+            sched.meta["step_beats"], sched.meta["edge_hops"], streams=S,
+            occupancy=occ)
+    if sched.model == "p2p-chains":
+        return model.pipeline_chain_cycles(
+            sched.meta["beats"], sched.meta["chains_hops"],
+            sched.meta["rounds"], streams=S,
+            chains_cong=sched.meta.get("chains_cong"))
     return sum(
-        model.pipelined_ring_cycles(ph.beats, ph.paths, streams=S)
+        model.pipelined_ring_cycles(ph.beats, ph.paths, streams=S,
+                                    occupancy=occ)
         for ph in sched.phases
     )
 

@@ -217,7 +217,11 @@ def build_torus(nx: int = 4, ny: int = 4) -> Topology:
         n_routers=R, n_ports=P, n_endpoints=Etot, link_to=link_to,
         ep_attach=ep_attach, route=route, name=f"torus{nx}x{ny}",
         tile_coord=tile_coord,
-        meta={"nx": nx, "ny": ny, "n_tiles": Etot, "n_hbm": 0},
+        # wrap=True marks the cyclic channel dependencies of the wrap links:
+        # multi-hop wormhole traffic around a ring can deadlock (no virtual
+        # channels), so schedule builders must stick to neighbor-hop sends
+        # (e.g. all_to_all picks its store-and-forward ring algorithm)
+        meta={"nx": nx, "ny": ny, "n_tiles": Etot, "n_hbm": 0, "wrap": True},
     )
 
 

@@ -1,0 +1,240 @@
+"""ML-parallelism traffic compiler (repro.core.noc.ml_traffic) and the two
+collective primitives it added (all-to-all, p2p): schedule-level
+exactly-once replay, analytical-vs-measured cycle match (<=10%) for each
+compiled pattern on a 4x4 mesh, torus wrap-safety, and sweep/backend
+bit-equivalence for a MoE configuration."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.core.noc import collective_traffic as CT
+from repro.core.noc import ml_traffic as ML
+from repro.core.noc import sim as S
+from repro.core.noc.params import NocParams
+from repro.core.noc.topology import build_mesh, build_torus
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama4-scout-17b-a16e").reduced()
+
+
+def _run(topo, sched, n_cycles, params=None):
+    wl = CT.to_workload(topo, sched)
+    sim = S.build_sim(topo, params or NocParams(), wl)
+    st = S.run(sim, n_cycles)
+    return st, S.stats(sim, st)
+
+
+# ----------------------------------------------------------------------
+# schedule level: the new primitives replay exactly-once
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kw", [
+    dict(data_kb=8),
+    dict(data_kb=16, streams=2),
+    dict(data_kb=8, algo="ring"),
+    dict(data_kb=8, streams=2, order=np.arange(4, dtype=np.int32)),
+])
+def test_all_to_all_schedule_exactly_once(kw):
+    topo = build_mesh(nx=4, ny=4)
+    sched = CT.build(topo, "all-to-all", **kw)
+    CT.check_schedule(sched)  # deadlock-free + rx == expect_rx
+    n = len(sched.meta["order"])
+    assert sched.txns.sum() == sched.n_streams * n * (n - 1)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(data_kb=4, rounds=4),
+    dict(data_kb=8, rounds=8, streams=2),
+])
+def test_p2p_schedule_exactly_once(kw):
+    topo = build_mesh(nx=4, ny=4)
+    sched = CT.build(topo, "p2p", **kw)
+    CT.check_schedule(sched)
+    # relay gates: every non-head stage waits for round r before sending it
+    heads = {a for a, _ in sched.meta["pairs"]} - \
+        {b for _, b in sched.meta["pairs"]}
+    for a, _ in sched.meta["pairs"]:
+        expected = 0 if a in heads else 1
+        assert sched.gate[a, 0, 0] == expected
+
+
+def test_p2p_rejects_cycles_and_fan_in():
+    topo = build_mesh(nx=4, ny=4)
+    with pytest.raises(ValueError, match="cycle"):
+        CT.p2p(topo, [(0, 1), (1, 2), (2, 0)])
+    with pytest.raises(ValueError, match="predecessor"):
+        CT.p2p(topo, [(0, 2), (1, 2)])
+    with pytest.raises(ValueError, match="successor"):
+        CT.p2p(topo, [(0, 1), (0, 2)])
+
+
+def test_all_to_all_auto_picks_ring_on_torus():
+    mesh, torus = build_mesh(nx=4, ny=4), build_torus(nx=4, ny=4)
+    assert CT.all_to_all(mesh, data_kb=4).meta["algo"] == "direct"
+    assert CT.all_to_all(torus, data_kb=4).meta["algo"] == "ring"
+
+
+# ----------------------------------------------------------------------
+# fabric level: primitives vs the calibrated model
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kw,n_cycles", [
+    (dict(data_kb=8, streams=2), 1200),  # direct rotation, 2 streams
+    (dict(data_kb=64, streams=4), 4000),  # serializer/congestion-bound
+])
+def test_all_to_all_direct_measured_within_10pct(kw, n_cycles):
+    topo = build_mesh(nx=4, ny=4)
+    sched = CT.build(topo, "all-to-all", **kw)
+    st, out = _run(topo, sched, n_cycles)
+    np.testing.assert_array_equal(out["rx_bursts"], sched.expect_rx)
+    meas = CT.measured_cycles(out, topo)
+    est = CT.analytical_cycles(sched, NocParams(), topo)
+    assert abs(est - meas) <= 0.10 * meas, f"measured {meas} vs model {est}"
+    assert int(np.asarray(st.fabric.in_cnt).sum()) == 0  # fabric drained
+
+
+def test_all_to_all_ring_exact_on_torus():
+    topo = build_torus(nx=4, ny=4)
+    sched = CT.build(topo, "all-to-all", data_kb=16, streams=2)
+    st, out = _run(topo, sched, 4000)
+    np.testing.assert_array_equal(out["rx_bursts"], sched.expect_rx)
+    meas = CT.measured_cycles(out, topo)
+    est = CT.analytical_cycles(sched, NocParams(), topo)
+    assert abs(est - meas) <= 0.10 * meas, f"measured {meas} vs model {est}"
+
+
+def test_p2p_pipeline_fill_and_pace():
+    """Multi-chain relay pipeline: cycle match and the fill+pace shape
+    (doubling the rounds adds ~(rounds)*pace, not another fill)."""
+    topo = build_mesh(nx=4, ny=4)
+    params = NocParams()
+    meas = {}
+    for rounds in (4, 8):
+        pairs = [(r * 4 + c, (r + 1) * 4 + c) for r in range(3)
+                 for c in range(4)]
+        sched = CT.p2p(topo, pairs, data_kb=4, rounds=rounds)
+        _, out = _run(topo, sched, 4000)
+        np.testing.assert_array_equal(out["rx_bursts"], sched.expect_rx)
+        meas[rounds] = CT.measured_cycles(out, topo)
+        est = CT.analytical_cycles(sched, params, topo)
+        assert abs(est - meas[rounds]) <= 0.10 * meas[rounds]
+    pace = (meas[8] - meas[4]) / 4
+    assert pace < meas[4]  # fill dominates the first rounds
+
+
+# ----------------------------------------------------------------------
+# compiled phases: each ML pattern within 10% on the 4x4 mesh
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("workload", ML.WORKLOADS)
+def test_compiled_phase_matches_model_on_mesh(cfg, workload):
+    """The shared demo jobs (DEMO_SPECS — the exact configurations the CI
+    bench row and the interactive demos measure) stay within the 10%
+    accuracy bar."""
+    topo = build_mesh(nx=4, ny=4)
+    par_kw, tokens = ML.DEMO_SPECS[workload]
+    phases = ML.compile_traffic(cfg, ML.ParallelismSpec(**par_kw), topo,
+                                tokens_per_device=tokens, sim_cap_kb=16,
+                                workloads=[workload])
+    assert [ph.name for ph in phases] == [workload]
+    ph = phases[0]
+    CT.check_schedule(ph.sim_schedule)
+    params = NocParams()
+    est = CT.analytical_cycles(ph.sim_schedule, params, topo)
+    _, out = _run(topo, ph.sim_schedule, int(est * 1.5) + 400)
+    np.testing.assert_array_equal(out["rx_bursts"], ph.sim_schedule.expect_rx)
+    meas = CT.measured_cycles(out, topo)
+    assert abs(est - meas) <= 0.10 * meas, \
+        f"{workload}: measured {meas} vs model {est}"
+
+
+def test_compiled_step_on_torus_all_phases(cfg):
+    """Grid-aligned degrees on the torus: every phase delivers and matches
+    the model; the full-size step report scales count x per-invocation."""
+    topo = build_torus(nx=4, ny=4)
+    par = ML.ParallelismSpec(dp=2, tp=4, pp=2, ep=2, microbatches=4)
+    phases = ML.compile_traffic(cfg, par, topo, tokens_per_device=256,
+                                sim_cap_kb=8)
+    assert [ph.name for ph in phases] == ["ddp", "tp", "moe", "pp"]
+    params = NocParams()
+    for ph in phases:
+        CT.check_schedule(ph.sim_schedule)
+        est = CT.analytical_cycles(ph.sim_schedule, params, topo)
+        _, out = _run(topo, ph.sim_schedule, int(est * 1.5) + 400)
+        np.testing.assert_array_equal(out["rx_bursts"],
+                                      ph.sim_schedule.expect_rx)
+        meas = CT.measured_cycles(out, topo)
+        assert abs(est - meas) <= 0.10 * meas, f"{ph.name}: {meas} vs {est}"
+    report = ML.step_report(phases, params, topo)
+    for ph, r in zip(phases, report):
+        per_inv = CT.analytical_cycles(ph.schedule, params, topo)
+        assert r["total_cycles"] == pytest.approx(per_inv * ph.count, rel=1e-6)
+
+
+def test_wrap_safety_rejects_strided_groups_on_torus(cfg):
+    """Strided rings around torus wrap rings close a wormhole
+    channel-dependency cycle; the compiler must reject them instead of
+    handing the simulator a deadlock."""
+    topo = build_torus(nx=4, ny=4)
+    with pytest.raises(ValueError, match="channel-dependency cycle"):
+        ML.compile_traffic(cfg, ML.ParallelismSpec(dp=4, tp=2, pp=2),
+                           topo, tokens_per_device=256)
+    # the identical spec is legal on the mesh (XY routing is acyclic)
+    phases = ML.compile_traffic(cfg, ML.ParallelismSpec(dp=4, tp=2, pp=2),
+                                build_mesh(nx=4, ny=4),
+                                tokens_per_device=256)
+    assert [ph.name for ph in phases] == ["ddp", "tp", "pp"]
+
+
+# ----------------------------------------------------------------------
+# sweep + backend bit-equivalence for a MoE configuration
+# ----------------------------------------------------------------------
+def _moe_workloads(topo, cfg):
+    par = ML.ParallelismSpec(dp=4, ep=4, streams=2)
+    wls = []
+    for tokens in (128, 256):
+        (ph,) = ML.compile_traffic(cfg, par, topo, tokens_per_device=tokens,
+                                   sim_cap_kb=8, workloads=["moe"])
+        wls.append(ML.phase_workload(topo, ph))
+    return wls
+
+
+def test_moe_sweep_matches_sequential(cfg):
+    """run_sweep over two compiled MoE configs is bit-identical to
+    sequential runs (the schedule triple rides the traced batch)."""
+    topo = build_mesh(nx=2, ny=2)
+    params = NocParams()
+    wls = _moe_workloads(topo, cfg)
+    sim0 = S.build_sim(topo, params, wls[0])
+    swept = S.run_sweep(sim0, wls, 400)
+    for wl, st in zip(wls, swept):
+        sim = S.build_sim(topo, params, wl)
+        ref = S.run(sim, 400)
+        for got, want in zip(jax.tree.leaves(st), jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def _assert_backends_identical(topo, wl, n_cycles):
+    states = {}
+    for backend in ("jnp", "pallas"):
+        sim = S.build_sim(topo, NocParams(backend=backend), wl)
+        states[backend] = S.run(sim, n_cycles)
+    for a, b in zip(jax.tree.leaves(states["jnp"]),
+                    jax.tree.leaves(states["pallas"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_moe_backend_bit_identical(cfg):
+    """The compiled MoE all-to-all runs bit-identically on the jnp and
+    pallas router backends (full final SimState equality, so measured
+    cycle counts are identical by construction)."""
+    topo = build_mesh(nx=2, ny=2)
+    _assert_backends_identical(topo, _moe_workloads(topo, cfg)[0], 300)
+
+
+def test_p2p_backend_bit_identical():
+    """Relay-gated p2p chains are backend bit-identical too."""
+    topo = build_mesh(nx=2, ny=2)
+    sched = CT.p2p(topo, [(0, 1), (1, 3)], data_kb=2, rounds=3)
+    _assert_backends_identical(topo, CT.to_workload(topo, sched), 300)

@@ -1,0 +1,96 @@
+"""Offline markdown link checker for the docs CI lane.
+
+Validates every inline link/image in the given markdown files:
+
+* relative file links must resolve to an existing file inside the repo
+  (a ``#fragment`` is checked against the target's headings using
+  GitHub's slug rules);
+* same-file ``#anchor`` links must match a heading;
+* ``http(s)``/``mailto`` links are skipped (no network in CI), as are
+  links that resolve outside the repo root (GitHub-relative URLs like
+  the CI badge's ``../../actions/...``).
+
+Usage: python tools/check_md_links.py README.md docs/*.md ...
+Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import functools
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+# inline links/images: [text](target) — tolerates one level of nested
+# brackets in the text (badges: [![CI](...)](...))
+_LINK = re.compile(r"!?\[(?:[^\[\]]|\[[^\]]*\])*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces to '-'."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def anchors_of(path: Path) -> set[str]:
+    """All heading anchors a markdown file exposes."""
+    text = _CODE_FENCE.sub("", path.read_text())
+    return {github_slug(m.group(1)) for m in _HEADING.finditer(text)}
+
+
+def check_file(path: Path) -> list[str]:
+    """Broken-link messages for one markdown file."""
+    errors = []
+    text = _CODE_FENCE.sub("", path.read_text())
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        if not target:  # same-file anchor
+            if frag and github_slug(frag) not in anchors_of(path):
+                errors.append(f"{path}: broken anchor #{frag}")
+            continue
+        dest = (path.parent / target).resolve()
+        try:
+            dest.relative_to(REPO)
+        except ValueError:
+            continue  # GitHub-relative URL (e.g. the CI badge) — skip
+        if not dest.exists():
+            errors.append(f"{path}: broken link {target}")
+        elif frag and dest.suffix == ".md" \
+                and github_slug(frag) not in anchors_of(dest):
+            errors.append(f"{path}: broken anchor {target}#{frag}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    """Check every file given on the command line; print a summary."""
+    if not argv:
+        print("usage: check_md_links.py FILE.md [FILE.md ...]")
+        return 2
+    errors = []
+    n = 0
+    for arg in argv:
+        p = Path(arg)
+        if not p.exists():
+            errors.append(f"{p}: file not found")
+            continue
+        n += 1
+        errors.extend(check_file(p))
+    for e in errors:
+        print(f"BROKEN: {e}")
+    print(f"checked {n} files: "
+          f"{'all links ok' if not errors else f'{len(errors)} broken'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
