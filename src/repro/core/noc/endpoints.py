@@ -112,17 +112,24 @@ class EndpointState:
     t_aww_left: jnp.ndarray  # [E]
     t_aww_src: jnp.ndarray  # [E]
     t_aww_txn: jnp.ndarray  # [E]
-    # memory request queue + server
+    # memory request queue + server. The queues are circular on the fast
+    # step path (head pointer advances on pop; pushes land at
+    # (head + cnt) % Q) and head-at-0 roll-based on the naive reference
+    # path (head stays 0); sim.canonical_state rotates/masks them into a
+    # common form for equivalence checks.
     mq: jnp.ndarray  # [E, Q, NMQ] packed requests
+    mq_head: jnp.ndarray  # [E] circular head (always 0 on the naive path)
     mq_cnt: jnp.ndarray  # [E]
     m_busy: jnp.ndarray  # [E] service countdown
     m_beats: jnp.ndarray  # [E] beats left of current response
     m_flit: jnp.ndarray  # current response template [E, NF]
     m_active: jnp.ndarray  # [E] bool
     hbm_tok: jnp.ndarray  # [E] f32
-    # egress queues (channel axis aligned with the fabric): flits + ready time
+    # egress queues (channel axis aligned with the fabric): flits + ready
+    # time; circular on the fast path like mq (eg_head always 0 on naive)
     eg: jnp.ndarray  # [C, E, Q, NF]
     eg_ready: jnp.ndarray  # [C, E, Q]
+    eg_head: jnp.ndarray  # [C, E]
     eg_cnt: jnp.ndarray  # [C, E]
     # stats
     lat_sum: jnp.ndarray  # [E] f32 narrow round-trip latency
@@ -164,12 +171,12 @@ def init_endpoints(E: int, params: NocParams, streams: int) -> EndpointState:
         w_stream=jnp.full((E,), -1, jnp.int32), w_left=z(E), w_beats=z(E),
         w_dst=z(E), w_txn=z(E), w_ts=z(E),
         t_aww_left=z(E), t_aww_src=z(E), t_aww_txn=z(E),
-        mq=z(E, Q, NMQ), mq_cnt=z(E),
+        mq=z(E, Q, NMQ), mq_head=z(E), mq_cnt=z(E),
         m_busy=z(E), m_beats=z(E), m_flit=empty_flits((E,)),
         m_active=jnp.zeros((E,), bool),
         hbm_tok=jnp.zeros((E,), jnp.float32),
         eg=z(C, E, EQ, NF), eg_ready=z(C, E, EQ),
-        eg_cnt=z(C, E),
+        eg_head=z(C, E), eg_cnt=z(C, E),
         lat_sum=jnp.zeros((E,), jnp.float32), lat_cnt=z(E),
         beats_rcvd=z(E), beats_sent=z(E), ni_stall=z(E), eg_overflow=z(E),
         hbm_served=z(E),
@@ -189,6 +196,23 @@ def _hash(a, b, c):
     return (h & u(0x7FFFFFFF)).astype(jnp.int32)
 
 
+def _col_add(x, idx, delta, vectorized: bool = False):
+    """``x[e, idx] += delta`` for every endpoint: x [E, K]; idx/delta
+    [..., E] with the endpoint axis last (leading axes, e.g. channel,
+    accumulate). The vectorized path lowers to a one-hot multiply-sum —
+    XLA CPU serializes scatter-adds, and K (txn-table/stream width) is
+    tiny — and is bit-identical integer math to the scatter."""
+    if vectorized:
+        K = x.shape[1]
+        oh = jnp.arange(K, dtype=jnp.int32) == idx[..., None]
+        contrib = jnp.where(oh, delta[..., None], 0)
+        if contrib.ndim > 2:
+            contrib = contrib.sum(axis=tuple(range(contrib.ndim - 2)))
+        return x + contrib
+    eidx = jnp.broadcast_to(jnp.arange(x.shape[0]), jnp.shape(idx))
+    return x.at[eidx, idx].add(delta)
+
+
 def _pack_mq(src, txn, beats, kind, ts, meta) -> jnp.ndarray:
     ref = jnp.asarray(src, jnp.int32)
     parts = [
@@ -198,27 +222,56 @@ def _pack_mq(src, txn, beats, kind, ts, meta) -> jnp.ndarray:
     return jnp.stack(parts, axis=-1)
 
 
-def _mq_push(mq, mq_cnt, mask, src, txn, beats, kind, ts, meta):
-    """Push one request per endpoint where mask [E]. mq: [E, Q, NMQ]."""
+def _mq_push(mq, mq_head, mq_cnt, mask, src, txn, beats, kind, ts, meta,
+             circular: bool = False):
+    """Push one request per endpoint where mask [E]. mq: [E, Q, NMQ].
+
+    ``circular=True`` is the fast path: one O(E) scattered write at
+    ``(head + cnt) % Q`` instead of an O(E*Q) one-hot/where over the whole
+    queue. Live contents are identical; they differ only on overflow (the
+    roll path clobbers the newest slot, the circular path wraps onto the
+    oldest), which every caller guards against (mq_max < memq_depth is a
+    tested invariant). The head never moves on a push.
+    """
     Q = mq.shape[1]
+    vals = _pack_mq(src, txn, beats, kind, ts, meta)  # [E, NMQ]
+    if circular:
+        E = mq.shape[0]
+        slot = jnp.where(mask, (mq_head + mq_cnt) % Q, Q)  # Q -> dropped
+        mq = mq.at[jnp.arange(E), slot].set(vals, mode="drop",
+                                            unique_indices=True)
+        return mq, mq_cnt + mask.astype(jnp.int32)
     idx = jnp.clip(mq_cnt, 0, Q - 1)
     onehot = jax.nn.one_hot(idx, Q, dtype=jnp.bool_) & mask[:, None]
-    vals = _pack_mq(src, txn, beats, kind, ts, meta)  # [E, NMQ]
     mq = jnp.where(onehot[..., None], vals[:, None, :], mq)
     return mq, mq_cnt + mask.astype(jnp.int32)
 
 
-def _mq_push_multi(mq, mq_cnt, mask, src, txn, beats, kind, ts, meta):
+def _mq_push_multi(mq, mq_head, mq_cnt, mask, src, txn, beats, kind, ts, meta,
+                   circular: bool = False):
     """Push up to one request per (channel, endpoint) where mask [C, E]; same-
     endpoint pushes from different channels land in consecutive slots (channel
-    order). All value args are [C, E] (or broadcastable scalars)."""
+    order). All value args are [C, E] (or broadcastable scalars).
+    ``circular`` as in :func:`_mq_push` (C scattered writes to distinct
+    slots instead of the one-hot winner resolution)."""
     Q = mq.shape[1]
     m = mask.astype(jnp.int32)
     offset = jnp.cumsum(m, axis=0) - m  # pushes from lower channels this cycle
-    idx = jnp.clip(mq_cnt[None, :] + offset, 0, Q - 1)
-    onehot = jax.nn.one_hot(idx, Q, dtype=jnp.bool_) & mask[..., None]  # [C, E, Q]
     vals = _pack_mq(jnp.broadcast_to(jnp.asarray(src, jnp.int32), mask.shape),
                     txn, beats, kind, ts, meta)  # [C, E, NMQ]
+    if circular:
+        E = mq.shape[0]
+        # dropped slots get Q + channel so every (e, slot) pair is unique
+        # (a masked-off endpoint hit by several channels would otherwise
+        # violate the unique_indices promise, even though all are dropped)
+        drop = Q + jnp.arange(mask.shape[0], dtype=jnp.int32)[:, None]
+        slot = jnp.where(mask, (mq_head[None] + mq_cnt[None] + offset) % Q,
+                         drop)
+        eb = jnp.broadcast_to(jnp.arange(E), mask.shape)  # [C, E]
+        mq = mq.at[eb, slot].set(vals, mode="drop", unique_indices=True)
+        return mq, mq_cnt + m.sum(axis=0)
+    idx = jnp.clip(mq_cnt[None, :] + offset, 0, Q - 1)
+    onehot = jax.nn.one_hot(idx, Q, dtype=jnp.bool_) & mask[..., None]  # [C, E, Q]
     # prefix offsets give each channel its own slot; on overflow the clip can
     # alias several channels onto slot Q-1, so keep only the highest channel
     # per slot (last-write-wins, like sequential per-channel pushes)
@@ -231,13 +284,53 @@ def _mq_push_multi(mq, mq_cnt, mask, src, txn, beats, kind, ts, meta):
     return mq, mq_cnt + m.sum(axis=0)
 
 
-def _eg_push(eg, eg_ready, eg_cnt, ch, mask, flit, ready):
+def _mq_pop(mq, mq_head, mq_cnt, can_pop, circular: bool = False):
+    """Peek + conditionally pop the head of every endpoint's memory queue.
+
+    Returns ``(head_vals [E, NMQ], mq, mq_head, mq_cnt)``. The circular pop
+    is just a head advance (the buffer is untouched); the roll pop shifts
+    the whole queue.
+    """
+    Q = mq.shape[1]
+    if circular:
+        head_vals = jnp.take_along_axis(mq, mq_head[:, None, None], axis=1)[:, 0]
+        mq_head = (mq_head + can_pop.astype(jnp.int32)) % Q
+        return head_vals, mq, mq_head, mq_cnt - can_pop.astype(jnp.int32)
+    head_vals = mq[:, 0]
+    mq = jnp.where(can_pop[:, None, None], jnp.roll(mq, -1, axis=1), mq)
+    return head_vals, mq, mq_head, mq_cnt - can_pop.astype(jnp.int32)
+
+
+def _eg_push(eg, eg_ready, eg_head, eg_cnt, ch, mask, flit, ready,
+             circular: bool = False):
     """Push flit [E, NF] onto the egress queue of channel ch, which may be a
-    static int or a per-endpoint [E] int array (dynamic channel select)."""
+    static int or a per-endpoint [E] int array (dynamic channel select).
+    ``circular`` as in :func:`_mq_push`: one scattered write per (ch, e,
+    slot) triple instead of the [C, E, Q] one-hot masks."""
     C, E, Q = eg_ready.shape
+    if circular and isinstance(ch, int):
+        # static channel: update only the eg[ch] slice instead of one-hot
+        # masking the whole [C, E, Q] buffer (same cells written)
+        slot = jnp.where(mask, (eg_head[ch] + eg_cnt[ch]) % Q, Q)
+        slot_oh = jax.nn.one_hot(slot, Q, dtype=jnp.bool_)  # [E, Q]
+        eg = eg.at[ch].set(
+            jnp.where(slot_oh[..., None], flit[:, None, :], eg[ch]))
+        eg_ready = eg_ready.at[ch].set(
+            jnp.where(slot_oh, ready[:, None], eg_ready[ch]))
+        return eg, eg_ready, eg_cnt.at[ch].add(mask.astype(jnp.int32))
     ch = jnp.broadcast_to(jnp.asarray(ch, jnp.int32), (E,))
     ch_oh = jax.nn.one_hot(ch, C, axis=0, dtype=jnp.bool_)  # [C, E]
     cnt_at = jnp.take_along_axis(eg_cnt, ch[None, :], axis=0)[0]  # [E]
+    if circular:
+        head_at = jnp.take_along_axis(eg_head, ch[None, :], axis=0)[0]  # [E]
+        slot = jnp.where(mask, (head_at + cnt_at) % Q, Q)  # Q -> dropped
+        # one-hot write (out-of-range slot Q -> all-false row): faster than
+        # a scattered write on CPU, same cells touched
+        slot_oh = jax.nn.one_hot(slot, Q, dtype=jnp.bool_)  # [E, Q]
+        m3 = ch_oh[:, :, None] & slot_oh[None]  # [C, E, Q]
+        eg = jnp.where(m3[..., None], flit[None, :, None, :], eg)
+        eg_ready = jnp.where(m3, ready[None, :, None], eg_ready)
+        return eg, eg_ready, eg_cnt + (ch_oh & mask[None]).astype(jnp.int32)
     slot_oh = jax.nn.one_hot(jnp.clip(cnt_at, 0, Q - 1), Q, dtype=jnp.bool_)  # [E, Q]
     m3 = ch_oh[:, :, None] & slot_oh[None] & mask[None, :, None]  # [C, E, Q]
     eg = jnp.where(m3[..., None], flit[None, :, None, :], eg)
@@ -245,11 +338,25 @@ def _eg_push(eg, eg_ready, eg_cnt, ch, mask, flit, ready):
     return eg, eg_ready, eg_cnt + (ch_oh & mask[None]).astype(jnp.int32)
 
 
-def _eg_pop(eg, eg_ready, eg_cnt, mask):
+def _eg_peek(eg, eg_ready, eg_head, circular: bool = False):
+    """Head flit + ready time of every (channel, endpoint) egress queue:
+    ``(head [C, E, NF], ready_ts [C, E])``."""
+    if circular:
+        head = jnp.take_along_axis(eg, eg_head[:, :, None, None], axis=2)[:, :, 0]
+        ready = jnp.take_along_axis(eg_ready, eg_head[:, :, None], axis=2)[:, :, 0]
+        return head, ready
+    return eg[:, :, 0, :], eg_ready[:, :, 0]
+
+
+def _eg_pop(eg, eg_ready, eg_head, eg_cnt, mask, circular: bool = False):
     """Pop the head of every (channel, endpoint) queue where mask [C, E]."""
+    if circular:
+        Q = eg_ready.shape[-1]
+        eg_head = (eg_head + mask.astype(jnp.int32)) % Q
+        return eg, eg_ready, eg_head, eg_cnt - mask.astype(jnp.int32)
     eg = jnp.where(mask[..., None, None], jnp.roll(eg, -1, axis=2), eg)
     eg_ready = jnp.where(mask[..., None], jnp.roll(eg_ready, -1, axis=2), eg_ready)
-    return eg, eg_ready, eg_cnt - mask.astype(jnp.int32)
+    return eg, eg_ready, eg_head, eg_cnt - mask.astype(jnp.int32)
 
 
 def _ni_check(st: EndpointState, txn, dst, params: NocParams, beats):
@@ -267,9 +374,15 @@ def _ni_check(st: EndpointState, txn, dst, params: NocParams, beats):
 
 def _ni_issue(st: EndpointState, mask, txn, dst, beats, params: NocParams):
     E = txn.shape[0]
-    eidx = jnp.arange(E)
-    ni_cnt = st.ni_cnt.at[eidx, txn].add(mask.astype(jnp.int32))
-    ni_dst = st.ni_dst.at[eidx, txn].set(jnp.where(mask, dst, st.ni_dst[eidx, txn]))
+    vec = params.step_impl == "fast"
+    ni_cnt = _col_add(st.ni_cnt, txn, mask.astype(jnp.int32), vec)
+    if vec:
+        oh = (jnp.arange(st.ni_dst.shape[1]) == txn[:, None]) & mask[:, None]
+        ni_dst = jnp.where(oh, dst[:, None], st.ni_dst)
+    else:
+        eidx = jnp.arange(E)
+        ni_dst = st.ni_dst.at[eidx, txn].set(
+            jnp.where(mask, dst, st.ni_dst[eidx, txn]))
     rob = st.rob_credit - jnp.where(mask & (params.ni_order == "rob"), beats, 0)
     return ni_cnt, ni_dst, rob
 
@@ -277,9 +390,8 @@ def _ni_issue(st: EndpointState, mask, txn, dst, beats, params: NocParams):
 def _ni_retire(ni_cnt, ni_dst, rob_credit, mask, txn, beats, params: NocParams):
     """Retire completions. mask/txn: [..., E]-shaped with the endpoint axis
     last (leading axes, e.g. channel, are scatter-summed)."""
-    E = ni_cnt.shape[0]
-    eidx = jnp.broadcast_to(jnp.arange(E), jnp.shape(txn))
-    ni_cnt = ni_cnt.at[eidx, txn].add(-mask.astype(jnp.int32))
+    ni_cnt = _col_add(ni_cnt, txn, -mask.astype(jnp.int32),
+                      params.step_impl == "fast")
     if params.ni_order == "rob":
         credit = jnp.where(mask, jnp.broadcast_to(jnp.asarray(beats, jnp.int32),
                                                   jnp.shape(txn)), 0)

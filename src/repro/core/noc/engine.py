@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.noc.topology import Topology
 from repro.kernels.noc_router import ops as router_ops
+from repro.kernels.noc_router import ref as router_ops_ref
 from repro.kernels.noc_router.ref import (  # noqa: F401  (re-exported API)
     F_DST,
     F_KIND,
@@ -143,32 +144,78 @@ def _inject_one(st: FabricState, tb: FabricTables, flit: jnp.ndarray, want: jnp.
 # while its rsp egress queue is full — without stalling the others).
 _cycle_all = jax.vmap(_cycle_one, in_axes=(0, None, 0))
 _inject_all = jax.vmap(_inject_one, in_axes=(0, None, 0, 0))
+# gather-based injection (the fast path): each attach port pulls its
+# endpoint's flit (unique attach => expressible as a gather + one-hot
+# select, much faster than a scattered write on CPU). Bit-identical to
+# _inject_all (untouched slots keep their contents either way).
+_inject_scatter = jax.vmap(router_ops_ref.inject_endpoints,
+                           in_axes=(0, 0, None, None, None, 0, 0))
 
 
 def fabric_cycle(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarray,
-                 backend: str = "jnp", interpret=None):
+                 backend: str = "jnp", interpret=None, *,
+                 router_tile: int = 1, fused_fifo: bool = False):
     """One cycle of every channel at once.
 
     ep_ingress_space: [C, E] bool — endpoint can accept one flit on that
     channel this cycle (a refused flit stays in the router's output buffer:
     memory-server-style backpressure into the fabric).
     ``backend`` selects the per-cycle compute path: ``"jnp"`` (vmapped
-    reference) or ``"pallas"`` ((C, R)-gridded kernel; ``interpret=None``
-    auto-interprets off TPU). The backends are bit-identical.
-    Returns (state', ep_flit [C, E, NF], ep_valid [C, E])."""
-    if backend == "jnp":
+    reference) or ``"pallas"`` ((C, R/K)-gridded kernel with
+    ``router_tile`` routers per program; ``interpret=None`` auto-interprets
+    off TPU). ``fused_fifo`` applies each FIFO's pop+push as one fused
+    gather/select on either backend (same live contents; the naive
+    reference path keeps it off). The backends are bit-identical for any
+    fixed ``fused_fifo``. Returns (state', ep_flit [C, E, NF],
+    ep_valid [C, E])."""
+    if backend == "jnp" and not fused_fifo:
         return _cycle_all(st, tb, ep_ingress_space)
     (in2, in_cnt2, out2, out_cnt2, rr, wh, ep_flit, ep_valid) = (
         router_ops.router_cycle(
             st.in_buf, st.in_cnt, st.out_buf, st.out_cnt, st.rr_ptr,
             st.wh_lock, tb.route, tb.link_src, tb.link_dst, tb.port_ep,
             tb.ep_attach, ep_ingress_space, backend=backend,
-            interpret=interpret))
+            interpret=interpret, router_tile=router_tile,
+            fused_fifo=fused_fifo))
     return FabricState(in2, in_cnt2, out2, out_cnt2, rr, wh), ep_flit, ep_valid
 
 
-def inject(st: FabricState, tb: FabricTables, flit: jnp.ndarray, want: jnp.ndarray):
+def fabric_cycles_fused(st: FabricState, tb: FabricTables,
+                        ep_ingress_space: jnp.ndarray,
+                        eg, eg_ready, eg_head, eg_cnt, cycle0,
+                        n_cycles: int, backend: str = "jnp", interpret=None):
+    """``n_cycles`` fused fabric cycles with egress injection threaded in.
+
+    The multi-cycle super-step core: the fabric advances ``n_cycles`` with
+    ``ep_ingress_space`` held and each endpoint's ready circular-egress
+    head injected per cycle (except the window's last — the caller injects
+    after the endpoint phases, making a 1-cycle window bit-identical to
+    ``fabric_cycle`` + ``inject``). On the Pallas backend the whole window
+    runs inside one kernel per channel with state resident across the
+    loop. Returns ``(state', eg, eg_ready, eg_head, eg_cnt,
+    ep_flit [C, N, E, NF], ep_valid [C, N, E], req_waiting [C, N, E])``.
+    """
+    (in2, in_cnt2, out2, out_cnt2, rr, wh, eg, eg_ready, eg_head, eg_cnt,
+     ep_flit, ep_valid, waiting) = router_ops.router_cycles_fused(
+        st.in_buf, st.in_cnt, st.out_buf, st.out_cnt, st.rr_ptr, st.wh_lock,
+        eg, eg_ready, eg_head, eg_cnt,
+        tb.route, tb.link_src, tb.link_dst, tb.port_ep, tb.ep_attach,
+        ep_ingress_space, cycle0, n_cycles, backend=backend,
+        interpret=interpret)
+    return (FabricState(in2, in_cnt2, out2, out_cnt2, rr, wh),
+            eg, eg_ready, eg_head, eg_cnt, ep_flit, ep_valid, waiting)
+
+
+def inject(st: FabricState, tb: FabricTables, flit: jnp.ndarray,
+           want: jnp.ndarray, scatter: bool = False):
     """Endpoints push one flit per channel into their attached port's in_buf
     (seen by the arbiter next cycle). flit [C, E, NF]; want [C, E].
+    ``scatter`` selects the O(E) scattered-write fast path (bit-identical).
     Returns (state, accepted [C, E])."""
+    if scatter:
+        er, ep_p = tb.ep_attach[:, 0], tb.ep_attach[:, 1]
+        in_buf, in_cnt, accepted = _inject_scatter(
+            st.in_buf, st.in_cnt, er, ep_p, tb.port_ep, flit, want)
+        return FabricState(in_buf, in_cnt, st.out_buf, st.out_cnt, st.rr_ptr,
+                           st.wh_lock), accepted
     return _inject_all(st, tb, flit, want)

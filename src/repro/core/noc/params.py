@@ -52,17 +52,43 @@ class NocParams:
     n_channels: int = 3
 
     # per-cycle router compute backend: "jnp" (vmapped reference) or
-    # "pallas" ((C, R)-gridded kernel, interpreted off TPU). Bit-identical;
-    # see repro.kernels.noc_router and tests/test_noc_backend.py.
+    # "pallas" ((C, ceil(R/K))-gridded kernel, interpreted off TPU).
+    # Bit-identical; see repro.kernels.noc_router and
+    # tests/test_noc_backend.py.
     backend: str = "jnp"
 
+    # step implementation: "fast" (circular queues, fused FIFO updates,
+    # scatter injection — the speed path) or "naive" (the roll-based
+    # reference step the fast path is equivalence-pinned against, see
+    # sim.canonical_state). Live behavior is identical; only dead queue
+    # slots / buffer garbage differ.
+    step_impl: str = "fast"
+
+    # Pallas grid tiling: K routers per program (grid (C, ceil(R/K))).
+    # The effective tile is the largest divisor of R <= router_tile, so any
+    # value is valid; 0 means "whole fabric per program" (K = R).
+    router_tile: int = 8
+
+    # multi-cycle super-stepping: cycles the fabric advances per fused
+    # kernel call in sim.run(..., super_cycles=...) / Sim.step_super.
+    # 1 (default) is bit-identical to per-cycle stepping; >1 quantizes
+    # endpoint interaction to super-step boundaries (see core/noc/README).
+    fused_cycles: int = 1
+
     def __post_init__(self):
-        """Validate the channel count and backend name."""
+        """Validate the channel count, backend name, and stepping knobs."""
         if self.n_channels < 3:
             raise ValueError("n_channels must be >= 3 (req, rsp, >=1 wide)")
         if self.backend not in ("jnp", "pallas"):
             raise ValueError(
                 f"backend must be 'jnp' or 'pallas', got {self.backend!r}")
+        if self.step_impl not in ("fast", "naive"):
+            raise ValueError(
+                f"step_impl must be 'fast' or 'naive', got {self.step_impl!r}")
+        if self.router_tile < 0:
+            raise ValueError("router_tile must be >= 0 (0 = whole fabric)")
+        if self.fused_cycles < 1:
+            raise ValueError("fused_cycles must be >= 1")
 
 
 # flit kinds

@@ -30,6 +30,7 @@ from repro.core.noc.engine import (
 from repro.core.noc.params import (
     CH_REQ,
     CH_RSP,
+    CH_WIDE,
     NARROW_REQ,
     NARROW_RSP,
     WIDE_AR,
@@ -59,6 +60,7 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
     role channels (CH_REQ / CH_RSP); wide kinds are recognized by kind on any
     wide channel, so counters are scatter-summed over the channel axis."""
     E = st.lat_sum.shape[0]
+    circ = params.step_impl == "fast"
     eidx = jnp.arange(E)
     ni_cnt, ni_dst, rob = st.ni_cnt, st.ni_dst, st.rob_credit
     kind = flits[..., F_KIND]  # [C, E]
@@ -78,28 +80,30 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
         (E,)).astype(jnp.int32)
     # the req-channel delivery is gated on rsp-egress space upstream (see
     # Sim.step), so this push can never overflow the queue
-    eg, eg_ready, eg_cnt = epm._eg_push(st.eg, st.eg_ready, st.eg_cnt, CH_RSP,
-                                        is_nreq, rsp_flit, rsp_ready)
-    mq, mq_cnt = epm._mq_push(st.mq, st.mq_cnt, is_war, f[:, F_SRC],
-                              f[:, F_TXN], f[:, F_META], WIDE_R, f[:, F_TS],
-                              f[:, F_META])
+    eg, eg_ready, eg_cnt = epm._eg_push(st.eg, st.eg_ready, st.eg_head,
+                                        st.eg_cnt, CH_RSP, is_nreq, rsp_flit,
+                                        rsp_ready, circular=circ)
+    mq, mq_cnt = epm._mq_push(st.mq, st.mq_head, st.mq_cnt, is_war,
+                              f[:, F_SRC], f[:, F_TXN], f[:, F_META], WIDE_R,
+                              f[:, F_TS], f[:, F_META], circular=circ)
 
     # ---- wide kinds (any channel) ----
     S = st.d_outst.shape[1]  # streams
-    eb = jnp.broadcast_to(eidx, valid.shape)  # [C, E]
     stream = jnp.clip(flits[..., F_TXN], 0, S - 1)
     # read data beats coming back to us (we are the issuer)
     is_r = valid & (kind == WIDE_R)
-    d_beats_got = st.d_beats_got.at[eb, stream].add(is_r.astype(jnp.int32))
+    d_beats_got = epm._col_add(st.d_beats_got, stream,
+                               is_r.astype(jnp.int32), circ)
     r_done = is_r & (flits[..., F_LAST] > 0)
-    d_outst = st.d_outst.at[eb, stream].add(-r_done.astype(jnp.int32))
-    d_done = st.d_done.at[eb, stream].add(r_done.astype(jnp.int32))
+    d_outst = epm._col_add(st.d_outst, stream, -r_done.astype(jnp.int32), circ)
+    d_done = epm._col_add(st.d_done, stream, r_done.astype(jnp.int32), circ)
     # retire exactly the beats that transfer issued (response F_META carries
     # the original burst size) — NOT the scalar wl.dma_beats, which over- or
     # under-frees RoB credits on variable-size scheduled (collective) DMA
-    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, r_done,
-                                         flits[..., F_TXN],
-                                         flits[..., F_META], params)
+    if not circ:
+        ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, r_done,
+                                             flits[..., F_TXN],
+                                             flits[..., F_META], params)
     # write bursts arriving (we are the target); wormhole => no interleave
     is_w = valid & (kind == WIDE_AW_W)
     beats_rcvd = st.beats_rcvd + (is_r | is_w).sum(axis=0)
@@ -108,12 +112,23 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
     last_rx = jnp.where(any_beat, cyc_e, st.last_rx)
     first_rx = jnp.where(any_beat & (st.first_rx < 0), cyc_e, st.first_rx)
     w_tail = is_w & (flits[..., F_LAST] > 0)
-    mq, mq_cnt = epm._mq_push_multi(mq, mq_cnt, w_tail, flits[..., F_SRC],
-                                    flits[..., F_TXN], 1, WIDE_B,
-                                    flits[..., F_TS], flits[..., F_META])
+    if circ and params.n_channels == 3:
+        # single wide channel: AW_W beats only ever ride CH_WIDE (req/rsp
+        # carry narrow/AR/B kinds), so the per-channel push collapses to a
+        # single-channel push — one third of the scattered rows, same cells
+        fw = flits[CH_WIDE]
+        mq, mq_cnt = epm._mq_push(mq, st.mq_head, mq_cnt, w_tail[CH_WIDE],
+                                  fw[:, F_SRC], fw[:, F_TXN], 1, WIDE_B,
+                                  fw[:, F_TS], fw[:, F_META], circular=True)
+    else:
+        mq, mq_cnt = epm._mq_push_multi(mq, st.mq_head, mq_cnt, w_tail,
+                                        flits[..., F_SRC], flits[..., F_TXN],
+                                        1, WIDE_B, flits[..., F_TS],
+                                        flits[..., F_META], circular=circ)
     # completed write bursts per stream: the data-dependency signal the
     # scheduled (collective) DMA gates on
-    rx_bursts = st.rx_bursts.at[eb, stream].add(w_tail.astype(jnp.int32))
+    rx_bursts = epm._col_add(st.rx_bursts, stream, w_tail.astype(jnp.int32),
+                             circ)
 
     # ---- rsp channel ----
     f = flits[CH_RSP]
@@ -123,16 +138,31 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
     lat_sum = st.lat_sum + jnp.where(
         is_nrsp, (cycle - f[:, F_TS] + rx_const).astype(jnp.float32), 0.0)
     lat_cnt = st.lat_cnt + is_nrsp.astype(jnp.int32)
-    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, is_nrsp,
-                                         f[:, F_TXN], 1, params)
     is_b = v & (f[:, F_KIND] == WIDE_B)
     stream_b = jnp.clip(f[:, F_TXN], 0, S - 1)
-    d_outst = d_outst.at[eidx, stream_b].add(-is_b.astype(jnp.int32))
-    d_done = d_done.at[eidx, stream_b].add(is_b.astype(jnp.int32))
+    d_outst = epm._col_add(d_outst, stream_b, -is_b.astype(jnp.int32), circ)
+    d_done = epm._col_add(d_done, stream_b, is_b.astype(jnp.int32), circ)
     # B responses carry the written burst's beat count in F_META: retire
     # what was actually issued (exact RoB credits for mixed-size schedules)
-    ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, is_b, f[:, F_TXN],
-                                         f[:, F_META], params)
+    if not circ:
+        ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, is_nrsp,
+                                             f[:, F_TXN], 1, params)
+        ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, is_b,
+                                             f[:, F_TXN], f[:, F_META], params)
+    else:
+        # fast path: the three retirements (wide-R tails on any channel,
+        # narrow responses and B responses on CH_RSP) have disjoint masks
+        # — a delivered flit has exactly one kind — and only add into
+        # ni_cnt / rob_credit, so one combined retire is bit-identical to
+        # the three sequential calls the naive path makes
+        rsp_row = jnp.arange(params.n_channels)[:, None] == CH_RSP
+        m_all = r_done | (rsp_row & (is_nrsp | is_b)[None])
+        beats_all = jnp.where(r_done, flits[..., F_META], 0) + jnp.where(
+            rsp_row & is_nrsp[None], 1, 0) + jnp.where(
+            rsp_row & is_b[None], f[None, :, F_META], 0)
+        ni_cnt, ni_dst, rob = epm._ni_retire(ni_cnt, ni_dst, rob, m_all,
+                                             flits[..., F_TXN], beats_all,
+                                             params)
 
     return dataclasses.replace(
         st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob, mq=mq, mq_cnt=mq_cnt,
@@ -146,6 +176,7 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
 def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
     """Narrow + DMA request generation into egress queues."""
     E = st.lat_sum.shape[0]
+    circ = params.step_impl == "fast"
     eidx = jnp.arange(E)
     eg, eg_ready, eg_cnt = st.eg, st.eg_ready, st.eg_cnt
     ni_cnt, ni_dst, rob = st.ni_cnt, st.ni_dst, st.rob_credit
@@ -173,8 +204,9 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
     stall_n = want_n & ~ok_n
     flit_n = eng.pack_flit(dst_n, eidx, NARROW_REQ, txn_n, 1, cycle, 1)
     eg, eg_ready, eg_cnt = epm._eg_push(
-        eg, eg_ready, eg_cnt, CH_REQ, fire_n, flit_n,
-        jnp.broadcast_to(cycle + src_delay, (E,)).astype(jnp.int32))
+        eg, eg_ready, st.eg_head, eg_cnt, CH_REQ, fire_n, flit_n,
+        jnp.broadcast_to(cycle + src_delay, (E,)).astype(jnp.int32),
+        circular=circ)
     ni_cnt, ni_dst, rob = epm._ni_issue(
         dataclasses.replace(st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob),
         fire_n, txn_n, dst_n, jnp.ones((E,), jnp.int32), params)
@@ -236,8 +268,9 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
         flit_ar = eng.pack_flit(pick_dst, eidx, WIDE_AR, pick_txn, 1, cycle,
                                 pick_beats)
         eg, eg_ready, eg_cnt = epm._eg_push(
-            eg, eg_ready, eg_cnt, CH_REQ, fire_d, flit_ar,
-            jnp.broadcast_to(cycle + src_delay, (E,)).astype(jnp.int32))
+            eg, eg_ready, st.eg_head, eg_cnt, CH_REQ, fire_d, flit_ar,
+            jnp.broadcast_to(cycle + src_delay, (E,)).astype(jnp.int32),
+            circular=circ)
         w_stream, w_left, w_beats, w_dst, w_txn, w_ts = (
             st.w_stream, st.w_left, st.w_beats, st.w_dst, st.w_txn, st.w_ts)
     else:
@@ -253,24 +286,32 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
     ni_cnt, ni_dst, rob = epm._ni_issue(
         dataclasses.replace(st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob),
         fire_d, pick_txn, pick_dst, pick_beats, params)
-    d_txns_left = st.d_txns_left.at[eidx, pick].add(-fire_d.astype(jnp.int32))
-    d_outst = st.d_outst.at[eidx, pick].add(fire_d.astype(jnp.int32))
-    d_seq = st.d_seq.at[eidx, pick].add(fire_d.astype(jnp.int32))
+    d_txns_left = epm._col_add(st.d_txns_left, pick,
+                               -fire_d.astype(jnp.int32), circ)
+    d_outst = epm._col_add(st.d_outst, pick, fire_d.astype(jnp.int32), circ)
+    d_seq = epm._col_add(st.d_seq, pick, fire_d.astype(jnp.int32), circ)
 
     # ---- write burst serializer: one AW_W beat per cycle ----
     beats_sent = st.beats_sent
     if wl.dma_write:
         active = w_stream >= 0
-        wch = wide_channel_of(jnp.clip(w_txn, 0, None), params.n_channels)
-        space_w = jnp.take_along_axis(eg_cnt, wch[None, :], axis=0)[0] < EQ
+        if circ and params.n_channels == 3:
+            # single wide channel: wide_channel_of is constant, so the
+            # serializer push can take _eg_push's static-channel slice path
+            wch = CH_WIDE
+            space_w = eg_cnt[CH_WIDE] < EQ
+        else:
+            wch = wide_channel_of(jnp.clip(w_txn, 0, None), params.n_channels)
+            space_w = jnp.take_along_axis(eg_cnt, wch[None, :], axis=0)[0] < EQ
         emit = active & space_w
         last = jnp.where(emit, (w_left == 1).astype(jnp.int32), 0)
         # META carries the burst's TOTAL beats so the target can echo it in
         # the B response (exact retirement credit at the issuer)
         flit_w = eng.pack_flit(w_dst, eidx, WIDE_AW_W, w_txn, last, w_ts, w_beats)
         eg, eg_ready, eg_cnt = epm._eg_push(
-            eg, eg_ready, eg_cnt, wch, emit, flit_w,
-            jnp.broadcast_to(cycle + 1, (E,)).astype(jnp.int32))
+            eg, eg_ready, st.eg_head, eg_cnt, wch, emit, flit_w,
+            jnp.broadcast_to(cycle + 1, (E,)).astype(jnp.int32),
+            circular=circ)
         beats_sent = beats_sent + emit.astype(jnp.int32)
         w_left = jnp.where(emit, w_left - 1, w_left)
         done_w = emit & (w_left == 0)
@@ -295,6 +336,7 @@ def _uniform_dst(e, seq, cycle, n_tiles):
 def _memory(st: epm.EndpointState, cycle, params: NocParams, is_hbm, is_mem):
     """Memory server: pop requests, serve after latency, emit response beats."""
     E = st.lat_sum.shape[0]
+    circ = params.step_impl == "fast"
     eidx = jnp.arange(E)
     EQ = st.eg_ready.shape[-1]
 
@@ -305,9 +347,8 @@ def _memory(st: epm.EndpointState, cycle, params: NocParams, is_hbm, is_mem):
     m_busy = jnp.maximum(st.m_busy - 1, 0)
     # pop next request when idle
     can_pop = ~st.m_active & (st.mq_cnt > 0) & is_mem
-    head = st.mq[:, 0]  # [E, NMQ]
-    mq = jnp.where(can_pop[:, None, None], jnp.roll(st.mq, -1, axis=1), st.mq)
-    mq_cnt = st.mq_cnt - can_pop.astype(jnp.int32)
+    head, mq, mq_head, mq_cnt = epm._mq_pop(st.mq, st.mq_head, st.mq_cnt,
+                                            can_pop, circular=circ)
     m_active = st.m_active | can_pop
     m_busy = jnp.where(can_pop, params.mem_lat + params.ni_rsp_lat, m_busy)
     m_beats = jnp.where(can_pop, head[:, epm.MQ_BEATS], st.m_beats)
@@ -329,8 +370,23 @@ def _memory(st: epm.EndpointState, cycle, params: NocParams, is_hbm, is_mem):
     out = m_flit.at[:, F_LAST].set((m_beats == 1).astype(jnp.int32))
     ready = jnp.broadcast_to(cycle + params.ni_req_lat, (E,)).astype(jnp.int32)
 
-    eg, eg_ready_, eg_cnt = epm._eg_push(st.eg, st.eg_ready, st.eg_cnt,
-                                         ch_of_kind, emit, out, ready)
+    if circ:
+        # fast path: split the dynamic-channel push into its two legs (wide
+        # read beats / B responses on CH_RSP) — the masks are disjoint per
+        # endpoint so the writes commute, and a static channel lets
+        # ``_eg_push`` slice-update instead of one-hot the whole buffer.
+        # With the default 3 channels the wide leg is static too.
+        wide_ch = CH_WIDE if params.n_channels == 3 else wch
+        eg, eg_ready_, eg_cnt = epm._eg_push(
+            st.eg, st.eg_ready, st.eg_head, st.eg_cnt, wide_ch,
+            emit & is_wide_r, out, ready, circular=True)
+        eg, eg_ready_, eg_cnt = epm._eg_push(
+            eg, eg_ready_, st.eg_head, eg_cnt, CH_RSP,
+            emit & ~is_wide_r, out, ready, circular=True)
+    else:
+        eg, eg_ready_, eg_cnt = epm._eg_push(st.eg, st.eg_ready, st.eg_head,
+                                             st.eg_cnt, ch_of_kind, emit, out,
+                                             ready, circular=circ)
 
     hbm_tok = jnp.where(is_hbm & emit & is_wide_r, hbm_tok - 1.0, hbm_tok)
     hbm_served = st.hbm_served + (emit & is_hbm & is_wide_r).astype(jnp.int32)
@@ -338,7 +394,8 @@ def _memory(st: epm.EndpointState, cycle, params: NocParams, is_hbm, is_mem):
     m_active = m_active & ~(emit & (m_beats == 0))
 
     return dataclasses.replace(
-        st, mq=mq, mq_cnt=mq_cnt, m_busy=m_busy, m_beats=m_beats, m_flit=m_flit,
+        st, mq=mq, mq_head=mq_head, mq_cnt=mq_cnt, m_busy=m_busy,
+        m_beats=m_beats, m_flit=m_flit,
         m_active=m_active, hbm_tok=hbm_tok, hbm_served=hbm_served,
         eg=eg, eg_ready=eg_ready_, eg_cnt=eg_cnt,
     )
@@ -376,6 +433,7 @@ class Sim:
         ep_valid [C, E])) — the per-channel endpoint deliveries. ``wl``
         overrides the baked-in workload (sweep engine: traced arrays)."""
         wl = self.wl if wl is None else wl
+        fast = self.params.step_impl == "fast"
         cycle = st.cycle
         E = self.topo.n_endpoints
         C = self.params.n_channels
@@ -391,7 +449,8 @@ class Sim:
         er, ep_p = self.tables.ep_attach[:, 0], self.tables.ep_attach[:, 1]
         req_waiting = st.fabric.out_cnt[CH_REQ, er, ep_p] > 0
         fabric, ep_flit, ep_valid = eng.fabric_cycle(
-            st.fabric, self.tables, space, backend=self.params.backend)
+            st.fabric, self.tables, space, backend=self.params.backend,
+            router_tile=self.params.router_tile, fused_fifo=fast)
         # 2) endpoint processing
         eps = _ingest(st.eps, ep_flit, ep_valid, cycle, self.params, wl)
         eps = dataclasses.replace(
@@ -400,27 +459,115 @@ class Sim:
         eps = _generators(eps, cycle, self.params, wl, wl.n_tiles)
         eps = _memory(eps, cycle, self.params, self.is_hbm, self.is_mem)
         # 3) egress -> injection: every channel's head whose ready time came
-        head = eps.eg[:, :, 0, :]  # [C, E, NF]
-        ready = (eps.eg_cnt > 0) & (eps.eg_ready[:, :, 0] <= cycle)  # [C, E]
-        fabric, accepted = eng.inject(fabric, self.tables, head, ready)
-        eg, eg_ready, eg_cnt = epm._eg_pop(eps.eg, eps.eg_ready, eps.eg_cnt, accepted)
-        eps = dataclasses.replace(eps, eg=eg, eg_ready=eg_ready, eg_cnt=eg_cnt)
+        head, ready_ts = epm._eg_peek(eps.eg, eps.eg_ready, eps.eg_head,
+                                      circular=fast)
+        ready = (eps.eg_cnt > 0) & (ready_ts <= cycle)  # [C, E]
+        fabric, accepted = eng.inject(fabric, self.tables, head, ready,
+                                      scatter=fast)
+        eg, eg_ready, eg_head, eg_cnt = epm._eg_pop(
+            eps.eg, eps.eg_ready, eps.eg_head, eps.eg_cnt, accepted,
+            circular=fast)
+        eps = dataclasses.replace(eps, eg=eg, eg_ready=eg_ready,
+                                  eg_head=eg_head, eg_cnt=eg_cnt)
         return SimState(fabric=fabric, eps=eps, cycle=cycle + 1), (ep_flit, ep_valid)
 
-    def _scan_fn(self, n_cycles: int, with_trace: bool):
-        """One jitted scan over the step body, cached per (length, trace)."""
-        key = (n_cycles, with_trace)
+    def step_super(self, st: SimState, wl: epm.Workload | None = None):
+        """One super-step: ``params.fused_cycles`` cycles per fabric call.
+
+        The fabric advances k cycles through ``eng.fabric_cycles_fused``
+        (one fused kernel launch per channel on the Pallas backend, state
+        resident across the window), recording per-cycle deliveries; the
+        endpoint phases then replay those k cycles in order against their
+        true cycle numbers, and the final egress injection closes the
+        window. Requires ``step_impl="fast"`` (circular egress queues are
+        threaded through the fused window).
+
+        A k=1 super-step is bit-identical to :meth:`step`. For k>1 the
+        endpoint interaction is quantized to the window: the req-channel
+        backpressure mask and delivery gating are sampled at the window
+        start and held, and an egress flit *pushed during* the window
+        becomes injectable only at the window close (entries already queued
+        inject per cycle inside the window, at their exact ready times,
+        since every push's ready stamp is >= push-cycle + 1). Use k=1
+        whenever exact per-cycle semantics matter; larger k trades that
+        fidelity for fewer host round trips. Returns
+        ``(state', (ep_flit [k, C, E, NF], ep_valid [k, C, E]))``.
+        """
+        wl = self.wl if wl is None else wl
+        k = self.params.fused_cycles
+        if self.params.step_impl != "fast":
+            raise ValueError("step_super requires step_impl='fast'")
+        cycle = st.cycle
+        E = self.topo.n_endpoints
+        C = self.params.n_channels
+        EQ = st.eps.eg_ready.shape[-1]
+        rsp_free = st.eps.eg_cnt[CH_RSP] < EQ
+        space = jnp.ones((C, E), bool).at[CH_REQ].set(rsp_free)
+        (fabric, eg, eg_ready, eg_head, eg_cnt, dF, dV, dW) = (
+            eng.fabric_cycles_fused(
+                st.fabric, self.tables, space, st.eps.eg, st.eps.eg_ready,
+                st.eps.eg_head, st.eps.eg_cnt, cycle, k,
+                backend=self.params.backend))
+        eps = dataclasses.replace(st.eps, eg=eg, eg_ready=eg_ready,
+                                  eg_head=eg_head, eg_cnt=eg_cnt)
+        # [C, k, ...] -> [k, C, ...] for the per-cycle endpoint replay
+        dF, dV, dW = (jnp.moveaxis(x, 1, 0) for x in (dF, dV, dW))
+
+        def ep_body(carry, xs):
+            """Endpoint phases of one window cycle (ingest/gen/memory)."""
+            eps, cyc = carry
+            flits, valids, waiting = xs
+            eps = _ingest(eps, flits, valids, cyc, self.params, wl)
+            eps = dataclasses.replace(
+                eps, eg_overflow=eps.eg_overflow
+                + (waiting[CH_REQ] & ~rsp_free).astype(jnp.int32))
+            eps = _generators(eps, cyc, self.params, wl, wl.n_tiles)
+            eps = _memory(eps, cyc, self.params, self.is_hbm, self.is_mem)
+            return (eps, cyc + 1), None
+
+        (eps, _), _ = jax.lax.scan(ep_body, (eps, cycle), (dF, dV, dW))
+
+        head, ready_ts = epm._eg_peek(eps.eg, eps.eg_ready, eps.eg_head,
+                                      circular=True)
+        ready = (eps.eg_cnt > 0) & (ready_ts <= cycle + (k - 1))
+        fabric, accepted = eng.inject(fabric, self.tables, head, ready,
+                                      scatter=True)
+        eg, eg_ready, eg_head, eg_cnt = epm._eg_pop(
+            eps.eg, eps.eg_ready, eps.eg_head, eps.eg_cnt, accepted,
+            circular=True)
+        eps = dataclasses.replace(eps, eg=eg, eg_ready=eg_ready,
+                                  eg_head=eg_head, eg_cnt=eg_cnt)
+        return SimState(fabric=fabric, eps=eps, cycle=cycle + k), (dF, dV)
+
+    def _scan_fn(self, n_cycles: int, with_trace: bool,
+                 fields: tuple = ("deliver",)):
+        """One jitted scan over the step body, cached per (length, trace,
+        fields). The incoming SimState is consumed — callers must not reuse
+        the state they pass in (run()/run_trace() delete its large buffers
+        after the scan, see ``_consume_state``)."""
+        k = self.params.fused_cycles
+        key = (n_cycles, with_trace, fields, k)
         fn = self._jit_cache.get(key)
         if fn is None:
+            if n_cycles % max(k, 1):
+                raise ValueError(
+                    f"n_cycles={n_cycles} not a multiple of "
+                    f"fused_cycles={k}")
+
             @jax.jit
             def fn(st):
                 """Scan ``step`` for n_cycles (closure-jitted)."""
                 def body(s, _):
-                    """One scan step: advance a cycle, optionally trace."""
-                    s2, deliver = self.step(s)
-                    return s2, (deliver if with_trace else None)
+                    """One scan step: advance a (super-)cycle, maybe trace."""
+                    if k > 1:
+                        s2, deliver = self.step_super(s)
+                    else:
+                        s2, deliver = self.step(s)
+                    if not with_trace:
+                        return s2, None
+                    return s2, _trace_slice(s2, deliver, fields)
 
-                return jax.lax.scan(body, st, None, length=n_cycles)
+                return jax.lax.scan(body, st, None, length=n_cycles // max(k, 1))
 
             self._jit_cache[key] = fn
         return fn
@@ -428,7 +575,9 @@ class Sim:
     def _sweep_fn(self, n_cycles: int, fields: tuple):
         """One jitted vmapped scan over N workload configs at once: the
         workload arrays become traced inputs instead of baked-in constants,
-        so the whole sweep compiles exactly once."""
+        so the whole sweep compiles exactly once. The batched workload
+        arrays are consumed (run_sweep stacks a fresh batch per call and
+        deletes it after the scan)."""
         key = ("sweep", n_cycles, fields)
         fn = self._jit_cache.get(key)
         if fn is None:
@@ -451,6 +600,54 @@ class Sim:
         return fn
 
 
+def _consume_state(st: SimState) -> None:
+    """Free the large buffers of a consumed input SimState.
+
+    ``run``/``run_trace`` consume the state they are given: the scan result
+    is a fresh pytree, so the input's big buffers (FIFO contents, memory and
+    egress queues) are deleted here to release their memory immediately.
+    This intentionally replaces jit donation (``donate_argnums``): declaring
+    input/output aliasing on the scan makes XLA's CPU while-loop copy the
+    carry every iteration (~25% of the whole step cost at 32x32), while an
+    explicit post-call delete frees the same memory without constraining
+    the loop. Only buffers the step always rewrites are deleted, so a
+    pass-through leaf can never be invalidated.
+    """
+    for buf in (st.fabric.in_buf, st.fabric.out_buf, st.eps.mq, st.eps.eg,
+                st.eps.eg_ready):
+        buf.delete()
+
+
+# selectable per-cycle trace fields for run_trace. The default traces only
+# the delivered flits (+ validity): O(T*C*E) — safe at 32x32/64x64 scale.
+# "counters" adds small per-cycle occupancy/progress counters; "fabric"
+# snapshots the whole FabricState every cycle, which is O(T*C*R*P*D*NF) and
+# will exhaust memory on large meshes — opt in deliberately.
+TRACE_FIELDS = ("deliver", "counters", "fabric")
+
+
+def _trace_slice(st: SimState, deliver, fields: tuple):
+    """Per-cycle trace pytree for the selected fields (scan-stacked)."""
+    out = {}
+    for f in fields:
+        if f == "deliver":
+            out[f] = deliver
+        elif f == "counters":
+            out[f] = {
+                "eg_cnt": st.eps.eg_cnt,
+                "mq_cnt": st.eps.mq_cnt,
+                "in_flight": st.fabric.in_cnt.sum(axis=(1, 2))
+                + st.fabric.out_cnt.sum(axis=(1, 2)),
+                "beats_rcvd": st.eps.beats_rcvd,
+                "n_sent": st.eps.n_sent,
+            }
+        else:  # "fabric" (validated in run_trace)
+            out[f] = st.fabric
+    if fields == ("deliver",):
+        return deliver  # back-compat: bare (flits, valid) tuple
+    return out
+
+
 def build_sim(topo: Topology, params: NocParams, wl: epm.Workload) -> Sim:
     """Assemble a Sim: fabric tables + HBM/memory maps for ``topo``."""
     E = topo.n_endpoints
@@ -466,17 +663,91 @@ def build_sim(topo: Topology, params: NocParams, wl: epm.Workload) -> Sim:
 
 
 def run(sim: Sim, n_cycles: int, state: SimState | None = None) -> SimState:
-    """Advance ``sim`` by ``n_cycles`` through one jit-compiled scan."""
+    """Advance ``sim`` by ``n_cycles`` through one jit-compiled scan.
+
+    ``params.fused_cycles`` > 1 advances in fused super-steps (n_cycles
+    must be a multiple). The incoming ``state`` is consumed — do not reuse
+    it after this call (re-init or use the returned state).
+    """
     st = state if state is not None else sim.init_state()
     s, _ = sim._scan_fn(n_cycles, with_trace=False)(st)
+    _consume_state(st)
     return s
 
 
-def run_trace(sim: Sim, n_cycles: int, state: SimState | None = None):
-    """Like run(), but also returns the per-cycle endpoint deliveries
-    (flits [T, C, E, NF], valid [T, C, E]) for invariant checks."""
+def run_trace(sim: Sim, n_cycles: int, state: SimState | None = None,
+              fields: tuple = ("deliver",)):
+    """Like run(), but also returns a per-cycle trace.
+
+    With the default ``fields=("deliver",)`` the trace is the endpoint
+    deliveries ``(flits [T, C, E, NF], valid [T, C, E])`` — the only
+    per-cycle record that stays affordable at 32x32+ scale. Other
+    ``TRACE_FIELDS`` ("counters", "fabric") come back in a dict keyed by
+    field name; "fabric" snapshots the full FabricState per cycle and is
+    intentionally opt-in (it is what OOMs on big meshes). ``state`` is
+    consumed, as in :func:`run`.
+    """
+    fields = tuple(fields)
+    for f in fields:
+        if f not in TRACE_FIELDS:
+            raise ValueError(
+                f"unknown trace field {f!r}; expected one of {TRACE_FIELDS}")
     st = state if state is not None else sim.init_state()
-    return sim._scan_fn(n_cycles, with_trace=True)(st)
+    s, trace = sim._scan_fn(n_cycles, with_trace=True, fields=fields)(st)
+    _consume_state(st)
+    k = sim.params.fused_cycles
+    if k > 1:
+        # deliveries come back [T/k, k, C, ...] from the super-step scan;
+        # flatten to per-cycle [T, C, ...] ("counters"/"fabric" stay
+        # per-super-step: they sample state at window boundaries)
+        flat = lambda x: x.reshape((-1,) + x.shape[2:])
+        if fields == ("deliver",):
+            trace = jax.tree.map(flat, trace)
+        elif "deliver" in trace:
+            trace["deliver"] = jax.tree.map(flat, trace["deliver"])
+    return s, trace
+
+
+def canonical_state(sim: Sim, st: SimState) -> SimState:
+    """SimState with implementation-defined garbage masked out.
+
+    The fast and naive step paths are behaviorally identical but leave
+    different garbage where no live data is stored: dead FIFO slots
+    (index >= count) after fused vs two-step updates, and rotated vs
+    head-at-0 circular queues. This rotates every circular queue to head 0
+    and zeroes all dead queue/FIFO slots, so
+    ``canonical_state(sim_fast, st_fast) == canonical_state(sim_naive,
+    st_naive)`` leaf-for-leaf iff the simulations agree on all live state.
+    """
+    f, eps = st.fabric, st.eps
+
+    def mask_fifo(buf, cnt):
+        """Zero slots at or past the FIFO count (buf [..., D, NF])."""
+        D = buf.shape[-2]
+        live = jnp.arange(D) < cnt[..., None]
+        return jnp.where(live[..., None], buf, 0)
+
+    fabric = dataclasses.replace(
+        f, in_buf=mask_fifo(f.in_buf, f.in_cnt),
+        out_buf=mask_fifo(f.out_buf, f.out_cnt))
+
+    Q = eps.mq.shape[1]
+    rot = (eps.mq_head[:, None] + jnp.arange(Q)[None]) % Q  # [E, Q]
+    mq = jnp.take_along_axis(eps.mq, rot[..., None], axis=1)
+    mq = jnp.where((jnp.arange(Q)[None] < eps.mq_cnt[:, None])[..., None],
+                   mq, 0)
+
+    EQ = eps.eg_ready.shape[-1]
+    rote = (eps.eg_head[..., None] + jnp.arange(EQ)) % EQ  # [C, E, EQ]
+    live = jnp.arange(EQ) < eps.eg_cnt[..., None]
+    eg = jnp.where(live[..., None],
+                   jnp.take_along_axis(eps.eg, rote[..., None], axis=2), 0)
+    eg_ready = jnp.where(live, jnp.take_along_axis(eps.eg_ready, rote, axis=2),
+                         0)
+    eps = dataclasses.replace(
+        eps, mq=mq, mq_head=jnp.zeros_like(eps.mq_head),
+        eg=eg, eg_ready=eg_ready, eg_head=jnp.zeros_like(eps.eg_head))
+    return SimState(fabric=fabric, eps=eps, cycle=st.cycle)
 
 
 # workload fields that may vary across a sweep batch (they become traced
@@ -520,6 +791,8 @@ def run_sweep(sim: Sim, wls: list[epm.Workload], n_cycles: int) -> list[SimState
         jnp.stack([jnp.asarray(getattr(w, f)) for w in wls]) for f in fields
     )
     final = sim._sweep_fn(n_cycles, fields)(batch)
+    for b in batch:
+        b.delete()
     return [jax.tree.map(lambda x, i=i: x[i], final) for i in range(len(wls))]
 
 

@@ -1,32 +1,47 @@
-"""Pallas backend for the FlooNoC router cycle, gridded over (C, R).
+"""Pallas backend for the FlooNoC router cycle: K-router tiles, fused cycles.
 
 One simulated cycle of the channel-batched fabric is two ``pallas_call``s,
-each with ``grid=(n_channels, n_routers)`` — one program per (channel,
-router), mirroring the hardware's per-tile router instances:
+each with ``grid=(n_channels, n_routers / K)`` — one program per (channel,
+K-router block). ``K`` (``NocParams.router_tile``) amortizes program
+dispatch and maps blocks onto real TPU/GPU lanes instead of 1-router
+programs; the effective tile is the largest divisor of R <= K so no
+padding is ever needed. The two calls per cycle are:
 
 1. **arb** — every program runs round-robin output arbitration for its
-   router from the cycle-start snapshot (its own input heads, occupancy,
-   wormhole locks and routing-table row) and emits the decisions:
-   pop/grant masks, the chosen flits, updated rr/wormhole state, and
-   whether each input FIFO has space after its pops (``in_space``).
+   router block from the cycle-start snapshot (its own input heads,
+   occupancy, wormhole locks and routing-table rows) and emits the
+   decisions: pop/grant masks, the chosen flits, updated rr/wormhole
+   state, and whether each input FIFO has space after its pops
+   (``in_space``).
 2. **apply** — every program consumes its own decisions plus the
    fabric-wide snapshot (all output heads/occupancy and ``in_space``, which
    is exactly the cross-router information a physical link sees) to resolve
-   link traversals, then applies the FIFO pops/pushes for its router.
+   link traversals, then applies the FIFO pops/pushes for its block.
 
 The split is required because link acceptance depends on the *downstream*
 router's arbitration pops: ``in_space`` of every router must be globally
-visible before any link decision, a barrier between the two kernels.
+visible before any link decision. That arb -> link barrier is the *only*
+per-cycle synchronization, which is what makes the multi-cycle fusion
+below legal.
+
+``router_cycles_fused_pallas`` exploits it: one ``pallas_call`` per
+channel block runs N simulated cycles in a ``fori_loop`` whose carry (the
+whole channel's fabric state plus the endpoint egress queues) stays
+resident in kernel memory (VMEM on TPU) instead of round-tripping through
+HBM every ``lax.scan`` step, with ``input_output_aliases`` donating the
+state buffers in place. Endpoint ingress (egress-queue injection) is
+threaded through the loop; deliveries/waiting masks are recorded per cycle
+for the endpoint phases that follow (see ``sim.Sim.step_super``).
 
 All decision math is imported from ``repro.kernels.noc_router.ref`` — the
 functions are rank-generic over the leading router axis, so the Pallas
-programs (R-block of 1) execute the very same code as the vmapped jnp
+programs (R-blocks of K) execute the very same code as the vmapped jnp
 reference (full R), making the backends bit-identical by construction.
 
 On CPU CI this runs with ``interpret=True`` (the grid becomes a scanned
 loop, still jit-able inside ``lax.scan``); on TPU the same kernels compile
-natively. Use ``repro.kernels.noc_router.ops.router_cycle`` for the
-backend-dispatching entry point.
+natively. Use ``repro.kernels.noc_router.ops`` for the backend-dispatching
+entry points.
 """
 from __future__ import annotations
 
@@ -40,17 +55,31 @@ from repro.kernels.noc_router import ref
 from repro.kernels.noc_router.ref import NF
 
 
+def effective_tile(router_tile: int, n_routers: int) -> int:
+    """Largest divisor of ``n_routers`` <= ``router_tile`` (0 = whole fabric).
+
+    Snapping to a divisor keeps every block full (no padding programs, no
+    masked lanes) while honoring the requested tile as an upper bound.
+    """
+    if router_tile <= 0 or router_tile >= n_routers:
+        return n_routers
+    k = router_tile
+    while n_routers % k:
+        k -= 1
+    return k
+
+
 def _arb_kernel(in_buf_ref, in_cnt_ref, out_cnt_ref, rr_ref, wh_ref, route_ref,
                 arb_pop_ref, granted_ref, chosen_ref, rr_out_ref, wh_out_ref,
                 in_space_ref, *, depth_out: int):
-    """Arbitration decisions for one (channel, router) program."""
+    """Arbitration decisions for one (channel, K-router block) program."""
     arb = ref.arb_decisions(
-        in_buf_ref[0],  # [1, P, Din, NF]
-        in_cnt_ref[0],  # [1, P]
+        in_buf_ref[0],  # [K, P, Din, NF]
+        in_cnt_ref[0],  # [K, P]
         out_cnt_ref[0],
         rr_ref[0],
         wh_ref[0],
-        route_ref[...],  # [1, E]
+        route_ref[...],  # [K, E]
         depth_out=depth_out,
     )
     arb_pop_ref[...] = arb.arb_pop[None]
@@ -66,30 +95,30 @@ def _apply_kernel(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref,
                   out_heads_all_ref, out_valid_all_ref, in_space_all_ref,
                   link_src_ref, link_dst_ref, port_ep_ref, ep_space_ref,
                   new_in_buf_ref, new_in_cnt_ref, new_out_buf_ref,
-                  new_out_cnt_ref):
-    """Link resolution + FIFO update for one (channel, router) program."""
-    in_buf = in_buf_ref[0]  # [1, P, Din, NF]
-    in_cnt = in_cnt_ref[0]  # [1, P]
-    out_buf = out_buf_ref[0]  # [1, P, Dout, NF]
+                  new_out_cnt_ref, *, fused: bool):
+    """Link resolution + FIFO update for one (channel, K-block) program."""
+    in_buf = in_buf_ref[0]  # [K, P, Din, NF]
+    in_cnt = in_cnt_ref[0]  # [K, P]
+    out_buf = out_buf_ref[0]  # [K, P, Dout, NF]
     out_cnt = out_cnt_ref[0]
 
     up_head, link_accept = ref.link_inputs(
         out_heads_all_ref[0],  # [R, P, NF] full-fabric snapshot
         out_valid_all_ref[0],  # [R, P]
-        link_src_ref[...],  # [1, P, 2] own upstream table row
-        in_space_ref[0],  # [1, P] own post-pop input space
+        link_src_ref[...],  # [K, P, 2] own upstream table rows
+        in_space_ref[0],  # [K, P] own post-pop input space
     )
     sent = ref.sent_mask(
-        out_cnt > 0,  # [1, P] own output-head validity
-        link_dst_ref[...],  # [1, P, 2]
-        port_ep_ref[...],  # [1, P]
+        out_cnt > 0,  # [K, P] own output-head validity
+        link_dst_ref[...],  # [K, P, 2]
+        port_ep_ref[...],  # [K, P]
         in_space_all_ref[0],  # [R, P] downstream space, fabric-wide
         ep_space_ref[0],  # [E] endpoint ingress space, this channel
     )
     in2, in_cnt2, out2, out_cnt2 = ref.apply_cycle(
         in_buf, in_cnt, out_buf, out_cnt,
         arb_pop_ref[0], granted_ref[0], chosen_ref[0],
-        link_accept, up_head, sent)
+        link_accept, up_head, sent, fused=fused)
     new_in_buf_ref[...] = in2[None]
     new_in_cnt_ref[...] = in_cnt2[None]
     new_out_buf_ref[...] = out2[None]
@@ -98,33 +127,39 @@ def _apply_kernel(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref,
 
 def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                         route, link_src, link_dst, port_ep, ep_attach,
-                        ep_space, *, interpret: bool = False):
+                        ep_space, *, router_tile: int = 1,
+                        fused_fifo: bool = False, interpret: bool = False):
     """One fabric cycle on the Pallas backend.
 
     State is channel-batched (``in_buf`` [C, R, P, Din, NF], counters
     [C, R, P]); tables are shared across channels (``route`` [R, E],
     ``link_src``/``link_dst`` [R, P, 2], ``port_ep`` [R, P], ``ep_attach``
     [E, 2]); ``ep_space`` [C, E] is the per-channel endpoint ingress-space
-    mask. Returns the updated state plus the endpoint deliveries
-    ``(ep_flit [C, E, NF], ep_valid [C, E])`` — identical, bit for bit, to
-    ``ref.router_cycle_reference`` vmapped over channels.
+    mask. ``router_tile`` blocks K routers per program (grid
+    ``(C, R / K)``); ``fused_fifo`` selects the fused FIFO datapath (must
+    match the jnp side being compared against). Returns the updated state
+    plus the endpoint deliveries ``(ep_flit [C, E, NF], ep_valid [C, E])``
+    — identical, bit for bit, to ``ref.router_cycle_reference`` vmapped
+    over channels with the same ``fused`` flag.
     """
     C, R, P = in_cnt.shape
     Din = in_buf.shape[-2]
     Dout = out_buf.shape[-2]
     E = ep_space.shape[-1]
     i32 = jnp.int32
+    K = effective_tile(router_tile, R)
+    G = R // K
 
     state_spec = lambda *tail: pl.BlockSpec(
-        (1, 1, *tail), lambda c, r: (c, r) + (0,) * len(tail))
+        (1, K, *tail), lambda c, r: (c, r) + (0,) * len(tail))
     chan_spec = lambda *tail: pl.BlockSpec(
         (1, *tail), lambda c, r: (c,) + (0,) * len(tail))
     router_spec = lambda *tail: pl.BlockSpec(
-        (1, *tail), lambda c, r: (r,) + (0,) * len(tail))
+        (K, *tail), lambda c, r: (r,) + (0,) * len(tail))
 
     arb_pop, granted, chosen, rr2, wh2, in_space = pl.pallas_call(
         functools.partial(_arb_kernel, depth_out=Dout),
-        grid=(C, R),
+        grid=(C, G),
         in_specs=[
             state_spec(P, Din, NF),  # in_buf
             state_spec(P),  # in_cnt
@@ -157,8 +192,8 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     out_valid = out_cnt > 0  # [C, R, P]
 
     in2, in_cnt2, out2, out_cnt2 = pl.pallas_call(
-        _apply_kernel,
-        grid=(C, R),
+        functools.partial(_apply_kernel, fused=fused_fifo),
+        grid=(C, G),
         in_specs=[
             state_spec(P, Din, NF),  # in_buf
             state_spec(P),  # in_cnt
@@ -167,7 +202,7 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
             state_spec(P),  # arb_pop
             state_spec(P),  # granted
             state_spec(P, NF),  # chosen
-            state_spec(P),  # in_space (own row)
+            state_spec(P),  # in_space (own rows)
             chan_spec(R, P, NF),  # out_heads, full fabric
             chan_spec(R, P),  # out_valid, full fabric
             chan_spec(R, P),  # in_space, full fabric
@@ -197,3 +232,130 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     ep_flit = out_heads[:, er, ep_p]  # [C, E, NF]
     ep_valid = out_valid[:, er, ep_p] & ep_space
     return in2, in_cnt2, out2, out_cnt2, rr2, wh2, ep_flit, ep_valid
+
+
+def _fused_kernel(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref, rr_ref,
+                  wh_ref, eg_ref, eg_ready_ref, eg_head_ref, eg_cnt_ref,
+                  route_ref, link_src_ref, link_dst_ref, port_ep_ref,
+                  ep_attach_ref, ep_space_ref, cycle0_ref,
+                  nin_buf_ref, nin_cnt_ref, nout_buf_ref, nout_cnt_ref,
+                  nrr_ref, nwh_ref, neg_ref, neg_ready_ref, neg_head_ref,
+                  neg_cnt_ref, deliver_f_ref, deliver_v_ref, waiting_ref,
+                  *, n_cycles: int):
+    """N fused fabric cycles for one channel, state resident in the loop.
+
+    The carry (fabric state + this channel's circular egress queue) lives
+    in kernel values across the ``fori_loop`` — VMEM on TPU — touching the
+    output refs only once at the end; per-cycle deliveries and waiting
+    masks are streamed out at their cycle index.
+    """
+    carry = (in_buf_ref[0], in_cnt_ref[0], out_buf_ref[0], out_cnt_ref[0],
+             rr_ref[0], wh_ref[0], eg_ref[0], eg_ready_ref[0],
+             eg_head_ref[0], eg_cnt_ref[0])
+    route = route_ref[...]
+    link_src = link_src_ref[...]
+    link_dst = link_dst_ref[...]
+    port_ep = port_ep_ref[...]
+    ep_attach = ep_attach_ref[...]
+    ep_space = ep_space_ref[0]
+    cycle0 = cycle0_ref[0]
+
+    def body(i, carry):
+        carry, (ep_flit, ep_valid, waiting) = ref.fused_cycle_body(
+            i, carry, route, link_src, link_dst, port_ep, ep_attach,
+            ep_space, cycle0, n_cycles)
+        sl = (pl.dslice(0, 1), pl.dslice(i, 1))
+        pl.store(deliver_f_ref, (*sl, slice(None), slice(None)),
+                 ep_flit[None, None])
+        pl.store(deliver_v_ref, (*sl, slice(None)), ep_valid[None, None])
+        pl.store(waiting_ref, (*sl, slice(None)), waiting[None, None])
+        return carry
+
+    carry = jax.lax.fori_loop(0, n_cycles, body, carry)
+    for out_ref, val in zip(
+            (nin_buf_ref, nin_cnt_ref, nout_buf_ref, nout_cnt_ref, nrr_ref,
+             nwh_ref, neg_ref, neg_ready_ref, neg_head_ref, neg_cnt_ref),
+            carry):
+        out_ref[...] = val[None]
+
+
+def router_cycles_fused_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr,
+                               wh_lock, eg, eg_ready, eg_head, eg_cnt,
+                               route, link_src, link_dst, port_ep, ep_attach,
+                               ep_space, cycle0, n_cycles: int, *,
+                               interpret: bool = False):
+    """``n_cycles`` fused fabric cycles, one program per channel.
+
+    Inputs are channel-batched state (+ the circular egress queues ``eg``
+    [C, E, Q, NF] / ``eg_ready`` [C, E, Q] / ``eg_head``/``eg_cnt``
+    [C, E]); ``cycle0`` is the window's first cycle number (traced scalar).
+    The state inputs are aliased onto the outputs (donated in place).
+    Returns ``(state'..., eg'..., ep_flit [C, N, E, NF],
+    ep_valid [C, N, E], req_waiting [C, N, E])`` — identical, bit for bit,
+    to ``ref.router_cycles_scan`` vmapped over channels.
+    """
+    C, R, P = in_cnt.shape
+    Din = in_buf.shape[-2]
+    Dout = out_buf.shape[-2]
+    E, Q = eg_ready.shape[-2:]
+    i32 = jnp.int32
+    N = n_cycles
+
+    chan_spec = lambda *tail: pl.BlockSpec(
+        (1, *tail), lambda c: (c,) + (0,) * len(tail))
+    full_spec = lambda *shape: pl.BlockSpec(shape, lambda c: (0,) * len(shape))
+
+    state_shapes = [
+        jax.ShapeDtypeStruct((C, R, P, Din, NF), i32),  # in_buf
+        jax.ShapeDtypeStruct((C, R, P), i32),  # in_cnt
+        jax.ShapeDtypeStruct((C, R, P, Dout, NF), i32),  # out_buf
+        jax.ShapeDtypeStruct((C, R, P), i32),  # out_cnt
+        jax.ShapeDtypeStruct((C, R, P), i32),  # rr_ptr
+        jax.ShapeDtypeStruct((C, R, P), i32),  # wh_lock
+        jax.ShapeDtypeStruct((C, E, Q, NF), i32),  # eg
+        jax.ShapeDtypeStruct((C, E, Q), i32),  # eg_ready
+        jax.ShapeDtypeStruct((C, E), i32),  # eg_head
+        jax.ShapeDtypeStruct((C, E), i32),  # eg_cnt
+    ]
+    state_specs = [
+        chan_spec(R, P, Din, NF),
+        chan_spec(R, P),
+        chan_spec(R, P, Dout, NF),
+        chan_spec(R, P),
+        chan_spec(R, P),
+        chan_spec(R, P),
+        chan_spec(E, Q, NF),
+        chan_spec(E, Q),
+        chan_spec(E),
+        chan_spec(E),
+    ]
+
+    outs = pl.pallas_call(
+        functools.partial(_fused_kernel, n_cycles=N),
+        grid=(C,),
+        in_specs=state_specs + [
+            full_spec(R, E),  # route
+            full_spec(R, P, 2),  # link_src
+            full_spec(R, P, 2),  # link_dst
+            full_spec(R, P),  # port_ep
+            full_spec(E, 2),  # ep_attach
+            chan_spec(E),  # ep_space
+            full_spec(1),  # cycle0
+        ],
+        out_specs=state_specs + [
+            chan_spec(N, E, NF),  # deliveries
+            chan_spec(N, E),  # delivery valid
+            chan_spec(N, E),  # req_waiting
+        ],
+        out_shape=state_shapes + [
+            jax.ShapeDtypeStruct((C, N, E, NF), i32),
+            jax.ShapeDtypeStruct((C, N, E), jnp.bool_),
+            jax.ShapeDtypeStruct((C, N, E), jnp.bool_),
+        ],
+        input_output_aliases={i: i for i in range(len(state_specs))},
+        interpret=interpret,
+    )(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+      eg, eg_ready, eg_head, eg_cnt,
+      route, link_src, link_dst, port_ep, ep_attach, ep_space,
+      jnp.reshape(jnp.asarray(cycle0, i32), (1,)))
+    return outs

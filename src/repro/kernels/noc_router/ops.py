@@ -1,12 +1,20 @@
-"""Public entry point: one router-fabric cycle, backend-dispatched.
+"""Public entry points: router-fabric cycles, backend-dispatched.
 
 ``router_cycle(..., backend="jnp" | "pallas")`` runs one cycle of the
 channel-batched fabric on raw arrays. ``"jnp"`` vmaps the reference
 implementation over the channel axis (the engine's historical hot path);
-``"pallas"`` launches the (C, R)-gridded kernels, interpreted off-TPU (so
-CPU CI exercises the exact kernel dataflow) and compiled on TPU. Both
-backends execute the same decision functions from ``ref.py`` and are
-bit-identical — pinned by ``tests/test_noc_backend.py``.
+``"pallas"`` launches the (C, R/K)-gridded kernels (``router_tile``
+routers per program), interpreted off-TPU (so CPU CI exercises the exact
+kernel dataflow) and compiled on TPU. Both backends execute the same
+decision functions from ``ref.py`` and are bit-identical — pinned by
+``tests/test_noc_backend.py``. ``fused_fifo`` selects the fused FIFO
+datapath on both backends (identical live contents either way; the flag
+must simply match across a bit-exact comparison).
+
+``router_cycles_fused(...)`` advances the fabric N cycles per call with
+endpoint egress injection threaded through (the multi-cycle super-step):
+``"jnp"`` scans ``ref.fused_cycle_body``, ``"pallas"`` runs the same body
+inside one kernel per channel with the state resident across the loop.
 
 Caveat: only the interpret path is exercised by CI (this container is
 CPU-only, like the repo's other Pallas kernels). The native TPU lowering
@@ -19,10 +27,18 @@ layers on top of it, not the other way around.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
-from repro.kernels.noc_router.noc_router import router_cycle_pallas
-from repro.kernels.noc_router.ref import router_cycle_reference
+from repro.kernels.noc_router.noc_router import (
+    router_cycle_pallas,
+    router_cycles_fused_pallas,
+)
+from repro.kernels.noc_router.ref import (
+    router_cycle_reference,
+    router_cycles_scan,
+)
 
 BACKENDS = ("jnp", "pallas")
 
@@ -30,6 +46,10 @@ BACKENDS = ("jnp", "pallas")
 # state and the per-channel endpoint ingress space; tables are shared.
 _cycle_jnp = jax.vmap(
     router_cycle_reference,
+    in_axes=(0, 0, 0, 0, 0, 0, None, None, None, None, None, 0),
+)
+_cycle_jnp_fused = jax.vmap(
+    functools.partial(router_cycle_reference, fused=True),
     in_axes=(0, 0, 0, 0, 0, 0, None, None, None, None, None, 0),
 )
 
@@ -40,7 +60,8 @@ def _interp(interpret):
 
 def router_cycle(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                  route, link_src, link_dst, port_ep, ep_attach, ep_space,
-                 *, backend: str = "jnp", interpret=None):
+                 *, backend: str = "jnp", interpret=None,
+                 router_tile: int = 1, fused_fifo: bool = False):
     """One cycle of every channel at once on the selected backend.
 
     State arrays are channel-batched ([C, R, P, ...]); tables are shared
@@ -49,12 +70,57 @@ def router_cycle(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     ep_flit [C, E, NF], ep_valid [C, E])``.
     """
     if backend == "jnp":
-        return _cycle_jnp(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
-                          route, link_src, link_dst, port_ep, ep_attach,
-                          ep_space)
+        fn = _cycle_jnp_fused if fused_fifo else _cycle_jnp
+        return fn(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+                  route, link_src, link_dst, port_ep, ep_attach, ep_space)
     if backend == "pallas":
         return router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr,
                                    wh_lock, route, link_src, link_dst,
                                    port_ep, ep_attach, ep_space,
+                                   router_tile=router_tile,
+                                   fused_fifo=fused_fifo,
                                    interpret=_interp(interpret))
+    raise ValueError(f"unknown router backend {backend!r}; expected one of {BACKENDS}")
+
+
+# vmap the single-channel fused scan over the channel axis: state + egress
+# queues and ep_space are per-channel, tables and the cycle base are shared.
+# out_axes puts the per-cycle outputs at [C, N, ...] like the kernel.
+_cycles_scan_jnp = jax.vmap(
+    router_cycles_scan,
+    in_axes=(0,) * 10 + (None,) * 5 + (0, None, None),
+    out_axes=(0, 0),
+)
+
+
+def router_cycles_fused(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+                        eg, eg_ready, eg_head, eg_cnt,
+                        route, link_src, link_dst, port_ep, ep_attach,
+                        ep_space, cycle0, n_cycles: int, *,
+                        backend: str = "jnp", interpret=None):
+    """``n_cycles`` fused fabric cycles with egress injection threaded in.
+
+    Same array contract as :func:`router_cycle` plus this channel-batched
+    circular egress queue (``eg`` [C, E, Q, NF], ``eg_ready`` [C, E, Q],
+    ``eg_head``/``eg_cnt`` [C, E]) and the window's first cycle number
+    ``cycle0``. ``ep_space`` is sampled once and held for the window (the
+    k=1 window is bit-identical to per-cycle stepping; see
+    ``sim.Sim.step_super`` for the k>1 contract). Returns the 10 updated
+    state arrays plus ``(ep_flit [C, N, E, NF], ep_valid [C, N, E],
+    req_waiting [C, N, E])``. Backends are bit-identical (same
+    ``ref.fused_cycle_body``).
+    """
+    if backend == "jnp":
+        carry, (ep_flit, ep_valid, waiting) = _cycles_scan_jnp(
+            in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+            eg, eg_ready, eg_head, eg_cnt,
+            route, link_src, link_dst, port_ep, ep_attach,
+            ep_space, cycle0, n_cycles)
+        return (*carry, ep_flit, ep_valid, waiting)
+    if backend == "pallas":
+        return router_cycles_fused_pallas(
+            in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+            eg, eg_ready, eg_head, eg_cnt,
+            route, link_src, link_dst, port_ep, ep_attach,
+            ep_space, cycle0, n_cycles, interpret=_interp(interpret))
     raise ValueError(f"unknown router backend {backend!r}; expected one of {BACKENDS}")

@@ -67,6 +67,39 @@ def fifo_push(buf: jnp.ndarray, cnt, push_mask, flit: jnp.ndarray):
     return newbuf, cnt + push_mask.astype(jnp.int32)
 
 
+def fifo_update(buf: jnp.ndarray, cnt, pop_mask, push_mask, flit: jnp.ndarray):
+    """Fused pop-then-push: one gather + one select instead of a roll, a
+    one-hot and two full-buffer writes.
+
+    Identical to ``fifo_pop`` followed by ``fifo_push`` on every *live* slot
+    (index < count); dead slots may hold different garbage than the two-step
+    pair leaves behind, which is why the ``step_impl="naive"`` reference path
+    keeps the two-step functions and equivalence is compared through
+    ``sim.canonical_state``. Never pushes past the last slot: callers
+    guarantee space (``link_accept`` requires ``in_space``; ``granted``
+    requires output-buffer room).
+    """
+    D = buf.shape[-2]
+    d = jnp.arange(D)
+    cnt1 = cnt - pop_mask.astype(jnp.int32)
+    if D == 2:
+        # depth-2 FIFOs (the default in/out buffers): write each slot with
+        # one direct select instead of shift-then-mask; one full-buffer
+        # materialization instead of two. Same result as the general path.
+        head = jnp.where(pop_mask[..., None], buf[..., 1, :], buf[..., 0, :])
+        tail = jnp.clip(cnt1, 0, 1)
+        s0 = jnp.where((push_mask & (tail == 0))[..., None], flit, head)
+        s1 = jnp.where((push_mask & (tail == 1))[..., None], flit,
+                       buf[..., 1, :])
+        newbuf = jnp.stack([s0, s1], axis=-2)
+        return newbuf, cnt1 + push_mask.astype(jnp.int32)
+    src = jnp.minimum(d + pop_mask[..., None].astype(jnp.int32), D - 1)
+    shifted = jnp.take_along_axis(buf, src[..., None], axis=-2)
+    at_tail = push_mask[..., None] & (d == jnp.clip(cnt1, 0, D - 1)[..., None])
+    newbuf = jnp.where(at_tail[..., None], flit[..., None, :], shifted)
+    return newbuf, cnt1 + push_mask.astype(jnp.int32)
+
+
 def heads(buf: jnp.ndarray) -> jnp.ndarray:
     """Head flit of every FIFO: [..., D, NF] -> [..., NF]."""
     return buf[..., 0, :]
@@ -117,9 +150,17 @@ def arb_decisions(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
 
     score = (pin - rr_ptr[:, None, :]) % P
     score = jnp.where(elig, score, P + 1)
-    winner = jnp.argmin(score, axis=1)  # [R, P_out]
-    granted = jnp.take_along_axis(score, winner[:, None, :], axis=1)[:, 0, :] <= P
-    win_onehot = jax.nn.one_hot(winner, P, axis=1, dtype=jnp.bool_) & granted[:, None, :]
+    # first-min selection unrolled over the (static, small) input-port axis:
+    # identical winner to jnp.argmin(score, axis=1) but ~2x faster on XLA CPU
+    best = score[:, 0, :]
+    winner = jnp.zeros_like(best)
+    for i in range(1, P):
+        si = score[:, i, :]
+        better = si < best
+        best = jnp.where(better, si, best)
+        winner = jnp.where(better, i, winner)
+    granted = best <= P  # [R, P_out]
+    win_onehot = (winner[:, None, :] == pin) & granted[:, None, :]
     arb_pop = jnp.any(win_onehot, axis=2)  # [R, P_in]
     chosen = jnp.take_along_axis(h, winner[:, :, None], axis=1)  # [R, P_out, NF]
 
@@ -177,8 +218,15 @@ def sent_mask(out_valid, link_dst, port_ep, in_space_all, ep_space):
 
 
 def apply_cycle(in_buf, in_cnt, out_buf, out_cnt, arb_pop, granted, chosen,
-                link_accept, up_head, sent):
-    """Apply the snapshot decisions: FIFO pops then pushes, per side."""
+                link_accept, up_head, sent, fused: bool = False):
+    """Apply the snapshot decisions: FIFO pops then pushes, per side.
+
+    ``fused=True`` applies each side's pop+push as one ``fifo_update``
+    (same live contents, different dead-slot garbage)."""
+    if fused:
+        in2, in_cnt2 = fifo_update(in_buf, in_cnt, arb_pop, link_accept, up_head)
+        out2, out_cnt2 = fifo_update(out_buf, out_cnt, sent, granted, chosen)
+        return in2, in_cnt2, out2, out_cnt2
     in1, in_cnt1 = fifo_pop(in_buf, in_cnt, arb_pop)
     in2, in_cnt2 = fifo_push(in1, in_cnt1, link_accept, up_head)
     out1, out_cnt1 = fifo_pop(out_buf, out_cnt, sent)
@@ -188,7 +236,7 @@ def apply_cycle(in_buf, in_cnt, out_buf, out_cnt, arb_pop, granted, chosen,
 
 def router_cycle_reference(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                            route, link_src, link_dst, port_ep, ep_attach,
-                           ep_space):
+                           ep_space, fused: bool = False):
     """One cycle of a single channel over the full fabric (reference).
 
     All state is single-channel ([R, P, ...]); ``ep_space`` [E] is the
@@ -196,7 +244,8 @@ def router_cycle_reference(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     ``(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock, ep_flit [E, NF],
     ep_valid [E])``. This is the extracted body of the original
     ``engine._cycle_one`` and the bit-exact specification the Pallas
-    backend is tested against.
+    backend is tested against. ``fused`` selects the fused FIFO datapath
+    (the fast/Pallas default; identical on live slots).
     """
     arb = arb_decisions(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
                         depth_out=out_buf.shape[-2])
@@ -209,9 +258,96 @@ def router_cycle_reference(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
 
     in2, in_cnt2, out2, out_cnt2 = apply_cycle(
         in_buf, in_cnt, out_buf, out_cnt, arb.arb_pop, arb.granted, arb.chosen,
-        link_accept, up_head, sent)
+        link_accept, up_head, sent, fused=fused)
 
     er, ep_p = ep_attach[:, 0], ep_attach[:, 1]
     ep_flit = out_heads[er, ep_p]  # [E, NF]
     ep_valid = out_valid[er, ep_p] & ep_space
     return in2, in_cnt2, out2, out_cnt2, arb.rr_ptr, arb.wh_lock, ep_flit, ep_valid
+
+
+def inject_endpoints(in_buf, in_cnt, er, ep_p, port_ep, flit, want):
+    """Gather-push one flit per endpoint into its attached input FIFO.
+
+    Single channel: ``in_buf`` [R, P, Din, NF], ``in_cnt`` [R, P],
+    ``er``/``ep_p`` [E] the attach (router, port) of every endpoint,
+    ``port_ep`` [R, P] the inverse map (endpoint at that port, -1), ``flit``
+    [E, NF], ``want`` [E]. Returns ``(in_buf, in_cnt, accepted [E])``.
+    Because attach ports are unique, the push is expressible as a *gather*
+    per (router, port) — each port pulls its endpoint's flit and writes
+    slot ``cnt`` via a one-hot select — which XLA CPU runs much faster than
+    a scattered write. Bit-identical to the one-hot ``fifo_push`` path
+    (untouched slots keep their garbage either way).
+    """
+    Din = in_buf.shape[-2]
+    pe = jnp.clip(port_ep, 0, None)  # [R, P]
+    want_rp = want[pe] & (port_ep >= 0)
+    acc_rp = want_rp & (in_cnt < Din)
+    flit_rp = flit[pe]  # [R, P, NF]
+    at = acc_rp[..., None] & (jnp.arange(Din) == in_cnt[..., None])
+    in_buf = jnp.where(at[..., None], flit_rp[..., None, :], in_buf)
+    in_cnt = in_cnt + acc_rp.astype(jnp.int32)
+    accepted = acc_rp[er, ep_p]  # [E]
+    return in_buf, in_cnt, accepted
+
+
+def fused_cycle_body(i, carry, route, link_src, link_dst, port_ep, ep_attach,
+                     ep_space, cycle0, n_cycles: int):
+    """One cycle of the fused multi-cycle window (single channel).
+
+    ``carry`` holds the fabric state plus this channel's endpoint egress
+    queue (circular: buf [E, Q, NF], ready [E, Q], head [E], cnt [E]).
+    Cycle ``i`` of the window: capture ``req_waiting`` (output head pending
+    at an attach port, pre-cycle), run the router cycle against the frozen
+    ``ep_space``, then inject each endpoint's ready egress head — except on
+    the window's last cycle, where the caller injects after running the
+    endpoint phases (so a window of 1 is bit-identical to per-cycle
+    stepping). Returns ``(carry', (ep_flit [E, NF], ep_valid [E],
+    req_waiting [E]))``.
+
+    This body is the single source of truth for both fused backends: the
+    jnp path scans it, the Pallas kernel runs it inside ``fori_loop`` with
+    the carry resident in kernel memory.
+    """
+    (in_buf, in_cnt, out_buf, out_cnt, rr, wh,
+     eg, eg_ready, eg_head, eg_cnt) = carry
+    er, ep_p = ep_attach[:, 0], ep_attach[:, 1]
+    req_waiting = out_cnt[er, ep_p] > 0
+
+    (in_buf, in_cnt, out_buf, out_cnt, rr, wh, ep_flit, ep_valid) = (
+        router_cycle_reference(in_buf, in_cnt, out_buf, out_cnt, rr, wh,
+                               route, link_src, link_dst, port_ep, ep_attach,
+                               ep_space, fused=True))
+
+    Q = eg_ready.shape[-1]
+    head_flit = jnp.take_along_axis(eg, eg_head[:, None, None], axis=1)[:, 0]
+    head_ready = jnp.take_along_axis(eg_ready, eg_head[:, None], axis=1)[:, 0]
+    want = (eg_cnt > 0) & (head_ready <= cycle0 + i) & (i < n_cycles - 1)
+    in_buf, in_cnt, accepted = inject_endpoints(in_buf, in_cnt, er, ep_p,
+                                                port_ep, head_flit, want)
+    eg_head = (eg_head + accepted.astype(jnp.int32)) % Q
+    eg_cnt = eg_cnt - accepted.astype(jnp.int32)
+
+    carry = (in_buf, in_cnt, out_buf, out_cnt, rr, wh,
+             eg, eg_ready, eg_head, eg_cnt)
+    return carry, (ep_flit, ep_valid, req_waiting)
+
+
+def router_cycles_scan(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+                       eg, eg_ready, eg_head, eg_cnt,
+                       route, link_src, link_dst, port_ep, ep_attach,
+                       ep_space, cycle0, n_cycles: int):
+    """``n_cycles`` of ``fused_cycle_body`` as a lax.scan (single channel).
+
+    The jnp reference for the fused Pallas kernel: same body, same order.
+    Returns ``(carry', (ep_flit [N, E, NF], ep_valid [N, E],
+    req_waiting [N, E]))``.
+    """
+    carry0 = (in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+              eg, eg_ready, eg_head, eg_cnt)
+
+    def body(carry, i):
+        return fused_cycle_body(i, carry, route, link_src, link_dst, port_ep,
+                                ep_attach, ep_space, cycle0, n_cycles)
+
+    return jax.lax.scan(body, carry0, jnp.arange(n_cycles))

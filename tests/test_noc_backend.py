@@ -33,27 +33,38 @@ def _assert_states_equal(a, b, tag=""):
                                       err_msg=tag)
 
 
-# one config per zoo topology; (name, build kwargs, n_channels, streams)
+# one config per zoo topology, paired with a router-tile size K and a
+# fused-super-step width k so every (K, k) axis value is exercised on the
+# zoo without a full cross-product:
+# (name, build kwargs, n_channels, streams, router_tile, fused_cycles).
+# router_tile 0 = whole fabric per program (K=R); fused_cycles > 1 runs
+# k cycles per pallas_call with state resident across the window.
 ZOO = [
-    ("mesh", dict(nx=4, ny=2), 3, 1),
-    ("mesh", dict(nx=4, ny=2), 4, 2),
-    ("torus", dict(nx=4, ny=2), 3, 1),
-    ("torus", dict(nx=4, ny=2), 4, 2),
-    ("multi_die", dict(n_dies=2, nx=2, ny=2, d2d=2), 3, 1),
-    ("multi_die", dict(n_dies=2, nx=2, ny=2, d2d=2), 4, 2),
+    ("mesh", dict(nx=4, ny=2), 3, 1, 1, 1),
+    ("mesh", dict(nx=4, ny=2), 4, 2, 4, 1),
+    ("torus", dict(nx=4, ny=2), 3, 1, 0, 1),
+    ("torus", dict(nx=4, ny=2), 4, 2, 1, 4),
+    ("multi_die", dict(n_dies=2, nx=2, ny=2, d2d=2), 3, 1, 4, 4),
+    ("multi_die", dict(n_dies=2, nx=2, ny=2, d2d=2), 4, 2, 0, 4),
 ]
 
 
-@pytest.mark.parametrize("name,kw,channels,streams", ZOO)
-def test_pallas_matches_jnp_state_bitexact(name, kw, channels, streams):
-    """Full SimState after 300 cycles is identical leaf-for-leaf."""
+@pytest.mark.parametrize("name,kw,channels,streams,tile,fused", ZOO)
+def test_pallas_matches_jnp_state_bitexact(name, kw, channels, streams,
+                                           tile, fused):
+    """Full SimState after 300 cycles is identical leaf-for-leaf, for the
+    per-cycle tiled kernel (fused_cycles=1, K routers per program) and the
+    fused multi-cycle kernel (fused_cycles=k) alike — each against the jnp
+    reference with the same stepping knobs."""
     topo = build_topology(name, **kw)
     wl = T.dma_workload(topo, "uniform", transfer_kb=1, n_txns=2,
                         streams=streams)
-    stj = S.run(S.build_sim(topo, NocParams(n_channels=channels), wl), 300)
+    stj = S.run(S.build_sim(
+        topo, NocParams(n_channels=channels, fused_cycles=fused), wl), 300)
     stp = S.run(S.build_sim(
-        topo, NocParams(n_channels=channels, backend="pallas"), wl), 300)
-    _assert_states_equal(stj, stp, f"{name} C={channels}")
+        topo, NocParams(n_channels=channels, backend="pallas",
+                        router_tile=tile, fused_cycles=fused), wl), 300)
+    _assert_states_equal(stj, stp, f"{name} C={channels} K={tile} k={fused}")
 
 
 def test_pallas_reproduces_golden_stat_pins():
