@@ -280,7 +280,8 @@ class FabricCollectiveModel:
 
     def rotation_all_to_all_cycles(self, beats: int, hop_mat, cong_mat=None,
                                    block_mat=None, streams: int = 1,
-                                   occupancy: float = 1.0) -> float:
+                                   occupancy: float = 1.0,
+                                   vc_chain=None) -> float:
         """Completion time of a lockstep-rotation (direct) all-to-all.
 
         ``hop_mat[i, k]`` is the router-traversal count of the edge ring
@@ -302,7 +303,18 @@ class FabricCollectiveModel:
         cannot issue step k+1 before its step-k B response returned); the
         final step pays only the one-way arrival. A congestion-free
         per-position recurrence over the gate/serializer/NI constraints
-        is kept as a floor for small fabrics where no link is shared."""
+        is kept as a floor for small fabrics where no link is shared.
+
+        ``vc_chain[k]`` (virtual-channel schedules only) is the size minus
+        one of the largest connected component of the step's
+        (link, VC)-sharing graph: on a VC fabric wormhole coupling is
+        transitive — burst A waiting on B waiting on C drains as one
+        serialized chain, and dateline-bumped VC1 traffic additionally
+        yields shared wires to VC0 sharers — so the step's occupancy
+        factor is floored at ``1 + 1.05 * vc_chain[k]`` (calibrated
+        against the 4x4-and-down torus all-to-all stress grid; the
+        nudge above full serialization pays for the VC0-priority
+        stalls)."""
         hop_mat = np.asarray(hop_mat, np.float64)
         n, K = hop_mat.shape
         if K == 0 or n < 2:
@@ -311,9 +323,14 @@ class FabricCollectiveModel:
                 else np.asarray(cong_mat, np.float64))
         block = cong if block_mat is None else np.asarray(block_mat, np.float64)
         eff = 1.0 + cong + 0.5 * (block - cong)  # wormhole occupancy factor
+        chain = (None if vc_chain is None
+                 else np.asarray(vc_chain, np.float64))
         total = 0.0
         for k in range(K):
-            thr = occupancy * eff[:, k].max() * streams * beats
+            eff_k = eff[:, k].max()
+            if chain is not None:
+                eff_k = max(eff_k, 1.0 + 1.05 * chain[k])
+            thr = occupancy * eff_k * streams * beats
             hmx = hop_mat[:, k].max()
             if k < K - 1:
                 lat = beats + 2 * self.hop_cycles * hmx + self.rt_cycles

@@ -54,7 +54,7 @@ import numpy as np
 from repro.core.collectives import FabricCollectiveModel
 from repro.core.noc.endpoints import Workload, idle_workload
 from repro.core.noc.params import NocParams
-from repro.core.noc.topology import Topology
+from repro.core.noc.topology import Topology, route_vcs
 
 COLLECTIVES = ["all-gather", "reduce-scatter", "all-reduce", "all-reduce-2d",
                "multicast", "barrier", "all-to-all", "p2p"]
@@ -330,7 +330,7 @@ def _route_links(topo: Topology, port_ep: np.ndarray, src: int,
 
 def all_to_all(topo: Topology, *, data_kb: float = 16, streams: int = 1,
                order: np.ndarray | None = None,
-               algo: str = "auto") -> CollectiveSchedule:
+               algo: str = "auto", n_vcs: int = 1) -> CollectiveSchedule:
     """All-to-all personalized exchange (the MoE dispatch/combine pattern).
 
     Every participating tile exchanges a distinct ``data_kb / n`` chunk
@@ -353,17 +353,24 @@ def all_to_all(topo: Topology, *, data_kb: float = 16, streams: int = 1,
       the VC-less fabric cannot break (``meta["wrap"]``); the fixed
       successor also never retargets the TxnID.
 
-    ``"auto"`` picks ``"ring"`` on wrap topologies and ``"direct"``
-    elsewhere. ``meta`` carries the analytical inputs, walked on the
-    routing tables: ``hop_mat[i, k]`` + per-step link-sharing
-    ``cong_mat[i, k]`` for direct, per-step beats + ring-edge hops for
-    ring.
+    ``"auto"`` picks ``"ring"`` on wrap topologies *when the fabric is
+    VC-less* and ``"direct"`` everywhere else: with ``n_vcs >= 2`` the
+    dateline VC-switch (docs/ROUTING.md) breaks the wrap cycles, so direct
+    rotation is deadlock-free on the torus too — and beats the ring
+    fallback, whose per-step payload is ``n - 1 - k`` chunks instead of 1.
+    ``meta`` carries the analytical inputs, walked on the routing tables:
+    ``hop_mat[i, k]`` + per-step link-sharing ``cong_mat[i, k]`` (physical
+    wire sharing — one flit per cycle per link regardless of VCs) +
+    wormhole-blocking ``block_mat[i, k]`` (at (link, VC) granularity:
+    bursts meeting on different VCs of a wire have separate FIFOs and
+    don't block each other's wormholes) for direct; per-step beats +
+    ring-edge hops for ring.
     """
     E = topo.n_endpoints
     order = ring_order(topo) if order is None else np.asarray(order, np.int32)
     n = len(order)
     if algo == "auto":
-        algo = "ring" if topo.meta.get("wrap") else "direct"
+        algo = "ring" if (topo.meta.get("wrap") and n_vcs < 2) else "direct"
     K = max(n - 1, 0)
     chunk = _beats_of(data_kb, n * streams)
     txns = np.zeros((E, streams), np.int32)
@@ -392,6 +399,7 @@ def all_to_all(topo: Topology, *, data_kb: float = 16, streams: int = 1,
     hop_mat = np.zeros((n, max(K, 1)), np.int32)
     port_ep = topo.port_ep
     links_of = {}  # (src, dst) -> link list, cached across steps
+    vcs_of = {}  # (src, dst) -> per-hop VC (all 0 when VC-less)
     cong_mat = np.zeros((n, max(K, 1)), np.int32)
     for i, tile in enumerate(order):
         peers = order[(i + 1 + k_arr) % n]
@@ -401,24 +409,58 @@ def all_to_all(topo: Topology, *, data_kb: float = 16, streams: int = 1,
         for k in range(K):
             route = _route_links(topo, port_ep, int(tile), int(peers[k]))
             links_of[(int(tile), int(peers[k]))] = route
+            vcs_of[(int(tile), int(peers[k]))] = (
+                route_vcs(topo, route) if n_vcs >= 2 else [0] * len(route))
             hop_mat[i, k] = len(route)  # one link per router traversal
     block_mat = np.zeros((n, max(K, 1)), np.int32)
+    vc_chain = np.zeros((max(K, 1),), np.int32)
     for k in range(K):
         load: dict = {}
-        sets = [frozenset(links_of[(int(t), int(order[(i + 1 + k) % n]))])
-                for i, t in enumerate(order)]
-        for mine in sets:
+        pairs = [(int(t), int(order[(i + 1 + k) % n]))
+                 for i, t in enumerate(order)]
+        phys = [frozenset(links_of[pr]) for pr in pairs]
+        # blocking is per (link, VC): separate VCs of one wire have their
+        # own input FIFOs, so wormholes only couple within a VC (at
+        # n_vcs=1 every VC is 0 and this reduces to plain link sets)
+        sets = [frozenset(zip(links_of[pr], vcs_of[pr])) for pr in pairs]
+        for mine in phys:
             for ln in mine:
                 load[ln] = load.get(ln, 0) + 1
         for i in range(n):
-            cong_mat[i, k] = max(load[ln] for ln in sets[i]) - 1
+            cong_mat[i, k] = max(load[ln] for ln in phys[i]) - 1
             block_mat[i, k] = sum(1 for j in range(n)
                                   if j != i and sets[i] & sets[j])
+        # transitive wormhole coupling: bursts whose routes form one
+        # connected component of the (link, VC)-sharing graph drain as a
+        # single serialized chain on a VC fabric (dateline-bumped VC1
+        # traffic additionally yields the wire to VC0 sharers), so the
+        # step is paced by the largest component, not the largest pair
+        parent = list(range(n))
+
+        def _find(a):
+            while parent[a] != a:
+                parent[a] = parent[parent[a]]
+                a = parent[a]
+            return a
+
+        for i in range(n):
+            for j in range(i + 1, n):
+                if sets[i] & sets[j]:
+                    parent[_find(i)] = _find(j)
+        comp: dict = {}
+        for i in range(n):
+            r = _find(i)
+            comp[r] = comp.get(r, 0) + 1
+        vc_chain[k] = max(comp.values()) - 1
+    meta = {"order": order, "beats": beats, "hop_mat": hop_mat,
+            "cong_mat": cong_mat, "block_mat": block_mat, "algo": algo,
+            "n_vcs": n_vcs}
+    if n_vcs >= 2:
+        meta["vc_chain"] = vc_chain
     return CollectiveSchedule(
         name="all-to-all", dst_seq=dst, gate=gate, beats_seq=bts, txns=txns,
         expect_rx=expect, phases=(), model="a2a-rotation",
-        meta={"order": order, "beats": beats, "hop_mat": hop_mat,
-              "cong_mat": cong_mat, "block_mat": block_mat, "algo": algo},
+        meta=meta,
     )
 
 
@@ -670,7 +712,7 @@ def analytical_cycles(sched: CollectiveSchedule, params: NocParams,
         return model.rotation_all_to_all_cycles(
             sched.meta["beats"], sched.meta["hop_mat"],
             sched.meta["cong_mat"], sched.meta.get("block_mat"), streams=S,
-            occupancy=occ)
+            occupancy=occ, vc_chain=sched.meta.get("vc_chain"))
     if sched.model == "a2a-ring":
         return model.ring_all_to_all_cycles(
             sched.meta["step_beats"], sched.meta["edge_hops"], streams=S,

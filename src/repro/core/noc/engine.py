@@ -72,10 +72,17 @@ class FabricState:
 
 
 def init_fabric(
-    topo: Topology, depth_in: int, depth_out: int, n_channels: int
+    topo: Topology, depth_in: int, depth_out: int, n_channels: int,
+    n_vcs: int = 1,
 ) -> FabricState:
-    """Empty fabric state for ``n_channels`` physical channels of ``topo``."""
-    C, R, P = n_channels, topo.n_routers, topo.n_ports
+    """Empty fabric state for ``n_channels`` physical channels of ``topo``.
+
+    With ``n_vcs > 1`` the port axis folds the VC axis in: slot
+    ``p * n_vcs + v`` is (physical port p, virtual channel v), so every
+    (port, VC) pair gets its own input FIFO, output buffer, round-robin
+    pointer, and wormhole lock. ``n_vcs=1`` is exactly the historical
+    per-port layout."""
+    C, R, P = n_channels, topo.n_routers, topo.n_ports * n_vcs
     return FabricState(
         in_buf=empty_flits((C, R, P, depth_in)),
         in_cnt=jnp.zeros((C, R, P), jnp.int32),
@@ -88,16 +95,27 @@ def init_fabric(
 
 @dataclass(frozen=True)
 class FabricTables:
-    """Static routing/wiring tables shared by every physical channel."""
+    """Static routing/wiring tables shared by every physical channel.
 
-    route: jnp.ndarray  # [R, E]
-    link_src: jnp.ndarray  # [R, P, 2] upstream (router, port) feeding my in port
-    link_dst: jnp.ndarray  # [R, P, 2]
-    port_ep: jnp.ndarray  # [R, P] endpoint attached (-1)
-    ep_attach: jnp.ndarray  # [E, 2]
+    With ``n_vcs > 1``, ``port_ep``/``ep_attach`` are *slot*-level (slot =
+    physical port * n_vcs + vc; endpoints always attach at VC0 of their
+    port) while ``route``/``link_src``/``link_dst`` stay physical —
+    arbitration expands a physical out-port to an output slot via
+    ``vc_out``, and the link stage folds V upstream slots back onto the
+    one physical wire. ``n_vcs=1`` keeps ``vc_out=None`` and every table
+    bit-identical to the historical fabric."""
+
+    route: jnp.ndarray  # [R, E] physical out port
+    link_src: jnp.ndarray  # [R, Pp, 2] upstream (router, port) feeding my in port
+    link_dst: jnp.ndarray  # [R, Pp, 2]
+    port_ep: jnp.ndarray  # [R, P] endpoint attached (-1); slot-level if V > 1
+    ep_attach: jnp.ndarray  # [E, 2] (router, port-or-slot)
+    # output VC for (router, input slot, physical out port); None when V == 1
+    vc_out: jnp.ndarray | None = None  # [R, P*V, Pp]
+    n_vcs: int = 1
 
 
-def make_tables(topo: Topology) -> FabricTables:
+def make_tables(topo: Topology, n_vcs: int = 1) -> FabricTables:
     """Device-resident FabricTables derived from a Topology's numpy tables."""
     R, P = topo.n_routers, topo.n_ports
     link_src = np.full((R, P, 2), -1, np.int32)
@@ -106,12 +124,43 @@ def make_tables(topo: Topology) -> FabricTables:
             r2, p2 = topo.link_to[r, p]
             if r2 >= 0:
                 link_src[r2, p2] = (r, p)
+    if n_vcs == 1:
+        return FabricTables(
+            route=jnp.asarray(topo.route),
+            link_src=jnp.asarray(link_src),
+            link_dst=jnp.asarray(topo.link_to),
+            port_ep=jnp.asarray(topo.port_ep),
+            ep_attach=jnp.asarray(topo.ep_attach),
+        )
+    V = n_vcs
+    # slot-level endpoint tables: endpoints live on VC0 of their port
+    port_ep = np.full((R, P * V), -1, np.int32)
+    port_ep[:, ::V] = topo.port_ep
+    ep_attach = topo.ep_attach.copy()
+    ep_attach[:, 1] *= V
+    # dateline VC-switching table: a flit arriving on input slot
+    # (pin, vin) and routed out physical port pout departs on
+    #   1            if dateline[r, pout]  (crossing the ring's dateline)
+    #   vin          if port_dim[r, pout] == port_dim[r, pin]  (same ring)
+    #   0            otherwise  (dimension turn / ejection resets the VC)
+    # Topologies without VC tables keep everything on VC0 (docs/ROUTING.md).
+    vc_out = np.zeros((R, P * V, P), np.int32)
+    if topo.port_dim is not None and topo.dateline is not None:
+        for pin in range(P):
+            for vin in range(V):
+                s = pin * V + vin
+                same = topo.port_dim[:, :] == topo.port_dim[:, pin:pin + 1]
+                vout = np.where(same, vin, 0)
+                vout = np.where(topo.dateline, np.minimum(1, V - 1), vout)
+                vc_out[:, s, :] = vout
     return FabricTables(
         route=jnp.asarray(topo.route),
         link_src=jnp.asarray(link_src),
         link_dst=jnp.asarray(topo.link_to),
-        port_ep=jnp.asarray(topo.port_ep),
-        ep_attach=jnp.asarray(topo.ep_attach),
+        port_ep=jnp.asarray(port_ep),
+        ep_attach=jnp.asarray(ep_attach),
+        vc_out=jnp.asarray(vc_out),
+        n_vcs=V,
     )
 
 
@@ -121,7 +170,8 @@ def _cycle_one(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarray)
         router_cycle_reference(
             st.in_buf, st.in_cnt, st.out_buf, st.out_cnt, st.rr_ptr,
             st.wh_lock, tb.route, tb.link_src, tb.link_dst, tb.port_ep,
-            tb.ep_attach, ep_ingress_space))
+            tb.ep_attach, ep_ingress_space, vc_out=tb.vc_out,
+            n_vcs=tb.n_vcs))
     return FabricState(in2, in_cnt2, out2, out_cnt2, rr, wh), ep_flit, ep_valid
 
 
@@ -176,7 +226,7 @@ def fabric_cycle(st: FabricState, tb: FabricTables, ep_ingress_space: jnp.ndarra
             st.wh_lock, tb.route, tb.link_src, tb.link_dst, tb.port_ep,
             tb.ep_attach, ep_ingress_space, backend=backend,
             interpret=interpret, router_tile=router_tile,
-            fused_fifo=fused_fifo))
+            fused_fifo=fused_fifo, vc_out=tb.vc_out, n_vcs=tb.n_vcs))
     return FabricState(in2, in_cnt2, out2, out_cnt2, rr, wh), ep_flit, ep_valid
 
 
@@ -201,7 +251,7 @@ def fabric_cycles_fused(st: FabricState, tb: FabricTables,
         eg, eg_ready, eg_head, eg_cnt,
         tb.route, tb.link_src, tb.link_dst, tb.port_ep, tb.ep_attach,
         ep_ingress_space, cycle0, n_cycles, backend=backend,
-        interpret=interpret)
+        interpret=interpret, vc_out=tb.vc_out, n_vcs=tb.n_vcs)
     return (FabricState(in2, in_cnt2, out2, out_cnt2, rr, wh),
             eg, eg_ready, eg_head, eg_cnt, ep_flit, ep_valid, waiting)
 

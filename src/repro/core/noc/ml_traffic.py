@@ -20,7 +20,8 @@ of one training step into per-phase
 * **moe** — expert-parallel token all-to-all (dispatch + combine, fwd +
   bwd) within each expert-parallel group; uses the deadlock-safe
   algorithm for the topology (direct rotation on acyclically-routed
-  fabrics, store-and-forward ring on a torus).
+  fabrics and on a torus with ``n_vcs >= 2``, store-and-forward ring on
+  a VC-less torus).
 * **pp** — pipeline-parallel point-to-point microbatch activations:
   relay-gated chains between consecutive stages, reproducing the real
   fill/drain skew.
@@ -47,7 +48,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.noc import collective_traffic as CT
-from repro.core.noc.topology import Topology
+from repro.core.noc.topology import Topology, route_vcs
 
 WORKLOADS = ["ddp", "tp", "moe", "pp"]
 
@@ -153,30 +154,9 @@ def _groups(par: ParallelismSpec):
     return tp_groups, dp_groups, ep_groups, pp_pairs
 
 
-def _check_wrap_safe(topo: Topology, sched, phase: str) -> None:
-    """Reject schedules whose routes close a channel-dependency cycle.
-
-    Dally-Seitz condition on wrap topologies (torus): a wormhole burst
-    holds its current link while waiting for the next one, so deadlock
-    is possible iff the union of the schedule's routes contains a cycle
-    in the link-waits-for graph — which the VC-less fabric cannot break
-    (see ``topology.build_torus``). Mesh / multi-die XY and Occamy's
-    up-down tree are acyclic by construction, so only ``meta["wrap"]``
-    fabrics are checked. The check is per phase: phases run one at a
-    time, so only transfers of the same schedule can hold links
-    concurrently."""
-    if not topo.meta.get("wrap"):
-        return
-    es, ss, ks = np.nonzero(sched.dst_seq >= 0)
-    pairs = {(int(e), int(sched.dst_seq[e, s, k]))
-             for e, s, k in zip(es, ss, ks)}
-    port_ep = topo.port_ep
-    waits: dict = {}  # link -> set of links it can wait on
-    for src, dst in pairs:
-        route = CT._route_links(topo, port_ep, src, dst)
-        for a, b in zip(route[:-1], route[1:]):
-            waits.setdefault(a, set()).add(b)
-    # cycle detection over the link-waits-for graph (iterative DFS)
+def _cycle_witness(waits: dict):
+    """First node found on a cycle of a waits-for graph, or None if acyclic
+    (iterative DFS, three-color)."""
     WHITE, GREY, BLACK = 0, 1, 2
     color = {ln: WHITE for ln in waits}
     for root in waits:
@@ -189,13 +169,7 @@ def _check_wrap_safe(topo: Topology, sched, phase: str) -> None:
             for nxt in it:
                 c = color.get(nxt, BLACK)  # terminal links have no deps
                 if c == GREY:
-                    raise ValueError(
-                        f"{phase}: routes on wrap topology {topo.name} "
-                        "close a wormhole channel-dependency cycle "
-                        f"(e.g. around link {nxt}); the VC-less fabric "
-                        "would deadlock. Pick parallelism degrees that "
-                        "align groups with the grid (e.g. tp = nx so "
-                        "data-parallel rings run down columns).")
+                    return nxt
                 if c == WHITE:
                     color[nxt] = GREY
                     stack.append((nxt, iter(waits[nxt])))
@@ -203,19 +177,82 @@ def _check_wrap_safe(topo: Topology, sched, phase: str) -> None:
             else:
                 color[node] = BLACK
                 stack.pop()
+    return None
+
+
+def required_vcs(topo: Topology, sched) -> int:
+    """Minimum ``NocParams.n_vcs`` for a schedule to be deadlock-free.
+
+    Dally-Seitz condition on wrap topologies (torus): a wormhole burst
+    holds its current channel while waiting for the next one, so deadlock
+    is possible iff the union of the schedule's routes contains a cycle
+    in the channel-waits-for graph. On a VC-less fabric a channel is a
+    physical link; with ``n_vcs >= 2`` it is a (link, VC) pair and the
+    dateline switch (``topology.route_vcs``, docs/ROUTING.md) reassigns
+    VCs so each ring's cycle is cut. Returns 1 if the link-level graph is
+    already acyclic (mesh / multi-die XY and Occamy's up-down tree always
+    are; so are grid-aligned torus rings), 2 if the dateline VC
+    assignment breaks every cycle, and a huge sentinel if even that graph
+    is cyclic (impossible for shortest-direction torus routing, possible
+    for a hand-built ``order`` that crosses a dateline twice). The
+    computation is per phase: phases run one at a time, so only transfers
+    of the same schedule hold channels concurrently.
+    """
+    if not topo.meta.get("wrap"):
+        return 1
+    es, ss, ks = np.nonzero(sched.dst_seq >= 0)
+    pairs = {(int(e), int(sched.dst_seq[e, s, k]))
+             for e, s, k in zip(es, ss, ks)}
+    port_ep = topo.port_ep
+    routes = [CT._route_links(topo, port_ep, src, dst)
+              for src, dst in pairs]
+    waits: dict = {}  # link -> set of links it can wait on
+    for route in routes:
+        for a, b in zip(route[:-1], route[1:]):
+            waits.setdefault(a, set()).add(b)
+    if _cycle_witness(waits) is None:
+        return 1
+    waits_vc: dict = {}  # (link, vc) -> set of (link, vc) it can wait on
+    for route in routes:
+        hops = list(zip(route, route_vcs(topo, route)))
+        for a, b in zip(hops[:-1], hops[1:]):
+            waits_vc.setdefault(a, set()).add(b)
+    if _cycle_witness(waits_vc) is None:
+        return 2
+    return 1 << 30  # no dateline VC assignment breaks the cycle
+
+
+def _check_wrap_safe(topo: Topology, sched, phase: str,
+                     n_vcs: int = 1) -> None:
+    """Raise unless the fabric has enough VCs for the schedule's routes
+    (``required_vcs``); the error names the fix on either axis — raise
+    ``n_vcs`` or realign the placement."""
+    need = required_vcs(topo, sched)
+    if n_vcs >= need:
+        return
+    raise ValueError(
+        f"{phase}: routes on wrap topology {topo.name} close a wormhole "
+        f"channel-dependency cycle the fabric's n_vcs={n_vcs} cannot "
+        f"break; this placement needs n_vcs >= {need} "
+        "(NocParams(n_vcs=2) enables dateline VC-switching — see "
+        "docs/ROUTING.md). Alternatively pick parallelism degrees that "
+        "align groups with the grid (e.g. tp = nx so data-parallel rings "
+        "run down columns).")
 
 
 def compile_traffic(cfg, par: ParallelismSpec, topo: Topology, *,
                     tokens_per_device: int = 1024,
                     sim_cap_kb: float = 32.0,
-                    workloads=None) -> list[TrafficPhase]:
+                    workloads=None, n_vcs: int = 1) -> list[TrafficPhase]:
     """Compile one training step's communication onto ``topo``.
 
     ``cfg`` is a ``repro.configs.ModelConfig`` (any registered arch);
     ``workloads`` restricts the emitted phases (default: every phase
     whose parallelism degree is active — dp>1 for ddp, tp>1, pp>1, and
     ep>1 with a routed-expert model for moe). Raises if the job needs
-    more devices than ``topo`` has tiles.
+    more devices than ``topo`` has tiles, or if a phase's routes need
+    more virtual channels than ``n_vcs`` (match ``NocParams.n_vcs`` of
+    the simulated fabric; ``required_vcs`` computes the threshold).
     """
     n_tiles = topo.meta["n_tiles"]
     if par.n_devices > n_tiles:
@@ -265,7 +302,8 @@ def compile_traffic(cfg, par: ParallelismSpec, topo: Topology, *,
     if "moe" in want and par.ep > 1 and cfg.n_experts:
         kb = _moe_kb(cfg, par, tokens_per_device)
         full, sim = _merged(CT.all_to_all, ep_groups, kb,
-                            streams=min(par.streams, par.max_streams))
+                            streams=min(par.streams, par.max_streams),
+                            n_vcs=n_vcs)
         groups = full.meta.get("group_scheds", (full,))
         algo = groups[0].meta["algo"]
         phases.append(TrafficPhase(
@@ -294,7 +332,7 @@ def compile_traffic(cfg, par: ParallelismSpec, topo: Topology, *,
                 f"this spec/config (ddp needs dp>1, tp needs tp>1, pp needs "
                 f"pp>1, moe needs ep>1 and a routed-expert model)")
     for ph in phases:
-        _check_wrap_safe(topo, ph.schedule, ph.name)
+        _check_wrap_safe(topo, ph.schedule, ph.name, n_vcs)
     return phases
 
 

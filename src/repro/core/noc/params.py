@@ -18,6 +18,15 @@ class NocParams:
     depth_in: int = 2  # input FIFO depth (paper: minimal input buffers)
     depth_out: int = 2  # output buffers (timing closure across >1mm links)
 
+    # virtual channels per physical channel. The paper's mesh routers are
+    # VC-less (1, the default — bit-identical to the historical fabric);
+    # 2 enables dateline VC-switching on torus wrap links, making
+    # shortest-direction XY routing on a torus provably deadlock-free
+    # (docs/ROUTING.md). Each (port, VC) pair gets its own depth_in input
+    # FIFO and depth_out output buffer; physical links carry one flit per
+    # cycle regardless of n_vcs.
+    n_vcs: int = 1
+
     # endpoint / NI
     n_txn_ids: int = 8  # AXI TxnIDs tracked per endpoint
     ni_order: str = "robless"  # "robless" | "rob"
@@ -89,6 +98,8 @@ class NocParams:
             raise ValueError("router_tile must be >= 0 (0 = whole fabric)")
         if self.fused_cycles < 1:
             raise ValueError("fused_cycles must be >= 1")
+        if self.n_vcs < 1:
+            raise ValueError("n_vcs must be >= 1")
 
 
 # flit kinds

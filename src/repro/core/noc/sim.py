@@ -423,7 +423,8 @@ class Sim:
         """Fresh SimState at cycle 0 (``wl`` overrides the built workload)."""
         wl = self.wl if wl is None else wl
         fabric = eng.init_fabric(self.topo, self.params.depth_in,
-                                 self.params.depth_out, self.params.n_channels)
+                                 self.params.depth_out, self.params.n_channels,
+                                 self.params.n_vcs)
         eps = epm.init_endpoints(self.topo.n_endpoints, self.params, wl.n_streams)
         eps = dataclasses.replace(eps, d_txns_left=jnp.asarray(wl.dma_txns))
         return SimState(fabric=fabric, eps=eps, cycle=jnp.zeros((), jnp.int32))
@@ -657,7 +658,8 @@ def build_sim(topo: Topology, params: NocParams, wl: epm.Workload) -> Sim:
         is_hbm[E - n_hbm :] = True
     is_mem = np.ones((E,), bool)  # every endpoint can serve (tiles: SPM)
     return Sim(
-        topo=topo, params=params, wl=wl, tables=eng.make_tables(topo),
+        topo=topo, params=params, wl=wl,
+        tables=eng.make_tables(topo, params.n_vcs),
         is_hbm=jnp.asarray(is_hbm), is_mem=jnp.asarray(is_mem),
     )
 

@@ -35,6 +35,14 @@ class Topology:
     name: str = "mesh"
     tile_coord: np.ndarray | None = None  # [E, 2] for mesh endpoints (x, y)
     meta: dict = field(default_factory=dict)
+    # VC-switching tables (None on acyclically-routed fabrics — all traffic
+    # stays on VC0 regardless of NocParams.n_vcs; see docs/ROUTING.md):
+    # port_dim[r, p] = routing dimension the port moves along (0 = X, 1 = Y,
+    # 2 = local/endpoint); dateline[r, p] = True iff the out-link at (r, p)
+    # is a ring's dateline (a torus wrap link) — traffic crossing it is
+    # bumped to VC1, breaking the ring's channel-dependency cycle.
+    port_dim: np.ndarray | None = None  # [R, P] int32
+    dateline: np.ndarray | None = None  # [R, P] bool
 
     @property
     def port_ep(self) -> np.ndarray:
@@ -169,13 +177,21 @@ def build_mesh(nx: int = 4, ny: int = 8, hbm_west: bool = True,
 def build_torus(nx: int = 4, ny: int = 4) -> Topology:
     """2-D torus: the mesh plus wrap links closing every row and column.
 
-    Routing is dateline-free dimension-ordered shortest-direction: each
-    router's table independently sends a flit the shorter way around the
-    X ring (ties go East), then the Y ring (ties go North). Every hop
-    strictly shrinks the remaining ring distance in the dimension being
-    routed, so table walks terminate without dateline bookkeeping. No HBM
-    endpoints: the edge W/S ports carry the wrap links. ``ny=1`` (or
-    ``nx=1``) degenerates to a 1-D torus ring.
+    Routing is dimension-ordered shortest-direction: each router's table
+    independently sends a flit the shorter way around the X ring (ties go
+    East), then the Y ring (ties go North). Every hop strictly shrinks the
+    remaining ring distance in the dimension being routed, so table walks
+    terminate. No HBM endpoints: the edge W/S ports carry the wrap links.
+    ``ny=1`` (or ``nx=1``) degenerates to a 1-D torus ring.
+
+    The builder also emits the VC-switching tables: ``port_dim`` (E/W = 0,
+    N/S = 1, L = 2) and ``dateline`` marking every wrap out-link (E at
+    x = nx-1, W at x = 0, N at y = ny-1, S at y = 0). With
+    ``NocParams.n_vcs >= 2`` the fabric bumps traffic crossing a dateline
+    to VC1, which provably breaks each ring's channel-dependency cycle
+    (docs/ROUTING.md) — multi-hop wormholes across wrap links then run
+    deadlock-free. With the VC-less default the wrap cycles remain, which
+    is why ``meta["wrap"]`` keeps gating schedule builders.
     """
     R = nx * ny
     P = 5
@@ -213,14 +229,34 @@ def build_torus(nx: int = 4, ny: int = 4) -> Topology:
             else:
                 dy = (ey - y) % ny
                 route[r, e] = N if dy <= ny - dy else S
+
+    # VC-switching tables: each port's routing dimension, and the dateline
+    # links — one per directed ring, sitting on the wrap edge (shortest-
+    # direction routing crosses at most one wrap per dimension, so a single
+    # dateline per ring suffices; docs/ROUTING.md carries the proof)
+    port_dim = np.full((R, P), -1, np.int32)
+    port_dim[:, [E, W]] = 0
+    port_dim[:, [N, S]] = 1
+    port_dim[:, L] = 2
+    dateline = np.zeros((R, P), bool)
+    for y in range(ny):
+        for x in range(nx):
+            r = rid(x, y)
+            if nx > 1:
+                dateline[r, E] = x == nx - 1
+                dateline[r, W] = x == 0
+            if ny > 1:
+                dateline[r, N] = y == ny - 1
+                dateline[r, S] = y == 0
     return Topology(
         n_routers=R, n_ports=P, n_endpoints=Etot, link_to=link_to,
         ep_attach=ep_attach, route=route, name=f"torus{nx}x{ny}",
-        tile_coord=tile_coord,
+        tile_coord=tile_coord, port_dim=port_dim, dateline=dateline,
         # wrap=True marks the cyclic channel dependencies of the wrap links:
-        # multi-hop wormhole traffic around a ring can deadlock (no virtual
-        # channels), so schedule builders must stick to neighbor-hop sends
-        # (e.g. all_to_all picks its store-and-forward ring algorithm)
+        # with a VC-less fabric (n_vcs=1) multi-hop wormhole traffic around
+        # a ring can deadlock, so schedule builders must stick to
+        # neighbor-hop sends (all_to_all's store-and-forward ring fallback);
+        # n_vcs >= 2 + the dateline tables above lift that restriction
         meta={"nx": nx, "ny": ny, "n_tiles": Etot, "n_hbm": 0, "wrap": True},
     )
 
@@ -308,6 +344,33 @@ def build_multi_die(n_dies: int = 2, nx: int = 4, ny: int = 4,
               "n_dies": n_dies, "die_nx": nx, "d2d": d2d,
               "repeaters": repeaters},
     )
+
+
+def route_vcs(topo: Topology, links: list[tuple[int, int]]) -> list[int]:
+    """VC occupied on each hop of a route (schedule-level mirror of the
+    fabric's dateline rule in ``kernels.noc_router.ref``).
+
+    ``links`` is a route's (router, out_port) hop sequence (e.g. from a
+    schedule builder's link walker). Injection starts on VC0; crossing a
+    dateline out-link bumps the flit to VC1; turning into a new routing
+    dimension (X -> Y, or into the local/ejection port) resets it to VC0.
+    On fabrics without VC tables every hop reports VC0 — matching the
+    fabric, which keeps all traffic on VC0 when no table says otherwise.
+    """
+    if topo.port_dim is None or topo.dateline is None:
+        return [0] * len(links)
+    vcs = []
+    v = 0
+    prev_dim = None
+    for r, p in links:
+        d = int(topo.port_dim[r, p])
+        if d != prev_dim:
+            v = 0
+        if bool(topo.dateline[r, p]):
+            v = 1
+        vcs.append(v)
+        prev_dim = d
+    return vcs
 
 
 def die_of(topo: Topology, tile: int) -> int:

@@ -90,12 +90,39 @@ def _arb_kernel(in_buf_ref, in_cnt_ref, out_cnt_ref, rr_ref, wh_ref, route_ref,
     in_space_ref[...] = arb.in_space[None]
 
 
+def _arb_kernel_vc(in_buf_ref, in_cnt_ref, out_cnt_ref, rr_ref, wh_ref,
+                   route_ref, vc_out_ref, arb_pop_ref, granted_ref,
+                   chosen_ref, rr_out_ref, wh_out_ref, in_space_ref,
+                   *, depth_out: int, n_vcs: int):
+    """VC-aware arbitration: the routing table's physical out port expands
+    to an output slot via the block's ``vc_out`` rows (dateline switching).
+    Separate from ``_arb_kernel`` so the default path's trace — pinned
+    bit-identical by the golden tests — carries no extra operand."""
+    arb = ref.arb_decisions(
+        in_buf_ref[0],  # [K, PV, Din, NF]
+        in_cnt_ref[0],  # [K, PV]
+        out_cnt_ref[0],
+        rr_ref[0],
+        wh_ref[0],
+        route_ref[...],  # [K, E]
+        depth_out=depth_out,
+        vc_out=vc_out_ref[...],  # [K, PV, Pp]
+        n_vcs=n_vcs,
+    )
+    arb_pop_ref[...] = arb.arb_pop[None]
+    granted_ref[...] = arb.granted[None]
+    chosen_ref[...] = arb.chosen[None]
+    rr_out_ref[...] = arb.rr_ptr[None]
+    wh_out_ref[...] = arb.wh_lock[None]
+    in_space_ref[...] = arb.in_space[None]
+
+
 def _apply_kernel(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref,
                   arb_pop_ref, granted_ref, chosen_ref, in_space_ref,
                   out_heads_all_ref, out_valid_all_ref, in_space_all_ref,
                   link_src_ref, link_dst_ref, port_ep_ref, ep_space_ref,
                   new_in_buf_ref, new_in_cnt_ref, new_out_buf_ref,
-                  new_out_cnt_ref, *, fused: bool):
+                  new_out_cnt_ref, *, fused: bool, n_vcs: int = 1):
     """Link resolution + FIFO update for one (channel, K-block) program."""
     in_buf = in_buf_ref[0]  # [K, P, Din, NF]
     in_cnt = in_cnt_ref[0]  # [K, P]
@@ -105,15 +132,17 @@ def _apply_kernel(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref,
     up_head, link_accept = ref.link_inputs(
         out_heads_all_ref[0],  # [R, P, NF] full-fabric snapshot
         out_valid_all_ref[0],  # [R, P]
-        link_src_ref[...],  # [K, P, 2] own upstream table rows
+        link_src_ref[...],  # [K, Pp, 2] own upstream table rows
         in_space_ref[0],  # [K, P] own post-pop input space
+        n_vcs=n_vcs,
     )
     sent = ref.sent_mask(
         out_cnt > 0,  # [K, P] own output-head validity
-        link_dst_ref[...],  # [K, P, 2]
+        link_dst_ref[...],  # [K, Pp, 2]
         port_ep_ref[...],  # [K, P]
         in_space_all_ref[0],  # [R, P] downstream space, fabric-wide
         ep_space_ref[0],  # [E] endpoint ingress space, this channel
+        n_vcs=n_vcs,
     )
     in2, in_cnt2, out2, out_cnt2 = ref.apply_cycle(
         in_buf, in_cnt, out_buf, out_cnt,
@@ -128,24 +157,29 @@ def _apply_kernel(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref,
 def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                         route, link_src, link_dst, port_ep, ep_attach,
                         ep_space, *, router_tile: int = 1,
-                        fused_fifo: bool = False, interpret: bool = False):
+                        fused_fifo: bool = False, interpret: bool = False,
+                        vc_out=None, n_vcs: int = 1):
     """One fabric cycle on the Pallas backend.
 
     State is channel-batched (``in_buf`` [C, R, P, Din, NF], counters
     [C, R, P]); tables are shared across channels (``route`` [R, E],
-    ``link_src``/``link_dst`` [R, P, 2], ``port_ep`` [R, P], ``ep_attach``
+    ``link_src``/``link_dst`` [R, Pp, 2], ``port_ep`` [R, P], ``ep_attach``
     [E, 2]); ``ep_space`` [C, E] is the per-channel endpoint ingress-space
     mask. ``router_tile`` blocks K routers per program (grid
     ``(C, R / K)``); ``fused_fifo`` selects the fused FIFO datapath (must
-    match the jnp side being compared against). Returns the updated state
-    plus the endpoint deliveries ``(ep_flit [C, E, NF], ep_valid [C, E])``
-    — identical, bit for bit, to ``ref.router_cycle_reference`` vmapped
-    over channels with the same ``fused`` flag.
+    match the jnp side being compared against). With ``n_vcs > 1`` the
+    state P axis is slot-level (physical ports Pp = P / n_vcs; link tables
+    stay physical) and the arb kernel additionally reads the block's
+    ``vc_out`` [R, P, Pp] rows. Returns the updated state plus the
+    endpoint deliveries ``(ep_flit [C, E, NF], ep_valid [C, E])`` —
+    identical, bit for bit, to ``ref.router_cycle_reference`` vmapped over
+    channels with the same ``fused`` flag.
     """
     C, R, P = in_cnt.shape
     Din = in_buf.shape[-2]
     Dout = out_buf.shape[-2]
     E = ep_space.shape[-1]
+    Pp = P // n_vcs  # physical ports per router (== P when n_vcs == 1)
     i32 = jnp.int32
     K = effective_tile(router_tile, R)
     G = R // K
@@ -157,8 +191,17 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     router_spec = lambda *tail: pl.BlockSpec(
         (K, *tail), lambda c, r: (r,) + (0,) * len(tail))
 
+    if n_vcs == 1:
+        arb_fn = functools.partial(_arb_kernel, depth_out=Dout)
+        arb_tables = [route]
+        arb_table_specs = [router_spec(E)]
+    else:
+        arb_fn = functools.partial(_arb_kernel_vc, depth_out=Dout,
+                                   n_vcs=n_vcs)
+        arb_tables = [route, vc_out]
+        arb_table_specs = [router_spec(E), router_spec(P, Pp)]
     arb_pop, granted, chosen, rr2, wh2, in_space = pl.pallas_call(
-        functools.partial(_arb_kernel, depth_out=Dout),
+        arb_fn,
         grid=(C, G),
         in_specs=[
             state_spec(P, Din, NF),  # in_buf
@@ -166,7 +209,7 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
             state_spec(P),  # out_cnt
             state_spec(P),  # rr_ptr
             state_spec(P),  # wh_lock
-            router_spec(E),  # route
+            *arb_table_specs,  # route (+ vc_out when V > 1)
         ],
         out_specs=[
             state_spec(P),  # arb_pop
@@ -185,14 +228,14 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
             jax.ShapeDtypeStruct((C, R, P), jnp.bool_),
         ],
         interpret=interpret,
-    )(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route)
+    )(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, *arb_tables)
 
     # fabric-wide snapshot views (cycle-start state, untouched by kernel 1)
     out_heads = out_buf[..., 0, :]  # [C, R, P, NF]
     out_valid = out_cnt > 0  # [C, R, P]
 
     in2, in_cnt2, out2, out_cnt2 = pl.pallas_call(
-        functools.partial(_apply_kernel, fused=fused_fifo),
+        functools.partial(_apply_kernel, fused=fused_fifo, n_vcs=n_vcs),
         grid=(C, G),
         in_specs=[
             state_spec(P, Din, NF),  # in_buf
@@ -206,9 +249,9 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
             chan_spec(R, P, NF),  # out_heads, full fabric
             chan_spec(R, P),  # out_valid, full fabric
             chan_spec(R, P),  # in_space, full fabric
-            router_spec(P, 2),  # link_src
-            router_spec(P, 2),  # link_dst
-            router_spec(P),  # port_ep
+            router_spec(Pp, 2),  # link_src (physical ports)
+            router_spec(Pp, 2),  # link_dst
+            router_spec(P),  # port_ep (slot-level)
             chan_spec(E),  # ep_space
         ],
         out_specs=[
@@ -234,20 +277,22 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     return in2, in_cnt2, out2, out_cnt2, rr2, wh2, ep_flit, ep_valid
 
 
-def _fused_kernel(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref, rr_ref,
-                  wh_ref, eg_ref, eg_ready_ref, eg_head_ref, eg_cnt_ref,
-                  route_ref, link_src_ref, link_dst_ref, port_ep_ref,
-                  ep_attach_ref, ep_space_ref, cycle0_ref,
-                  nin_buf_ref, nin_cnt_ref, nout_buf_ref, nout_cnt_ref,
-                  nrr_ref, nwh_ref, neg_ref, neg_ready_ref, neg_head_ref,
-                  neg_cnt_ref, deliver_f_ref, deliver_v_ref, waiting_ref,
-                  *, n_cycles: int):
+def _fused_impl(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref, rr_ref,
+                wh_ref, eg_ref, eg_ready_ref, eg_head_ref, eg_cnt_ref,
+                route_ref, link_src_ref, link_dst_ref, port_ep_ref,
+                ep_attach_ref, ep_space_ref, cycle0_ref,
+                nin_buf_ref, nin_cnt_ref, nout_buf_ref, nout_cnt_ref,
+                nrr_ref, nwh_ref, neg_ref, neg_ready_ref, neg_head_ref,
+                neg_cnt_ref, deliver_f_ref, deliver_v_ref, waiting_ref,
+                vc_out, n_cycles: int, n_vcs: int):
     """N fused fabric cycles for one channel, state resident in the loop.
 
     The carry (fabric state + this channel's circular egress queue) lives
     in kernel values across the ``fori_loop`` — VMEM on TPU — touching the
     output refs only once at the end; per-cycle deliveries and waiting
-    masks are streamed out at their cycle index.
+    masks are streamed out at their cycle index. Shared body of the
+    default and VC kernels (``vc_out=None, n_vcs=1`` traces exactly the
+    historical kernel).
     """
     carry = (in_buf_ref[0], in_cnt_ref[0], out_buf_ref[0], out_cnt_ref[0],
              rr_ref[0], wh_ref[0], eg_ref[0], eg_ready_ref[0],
@@ -263,7 +308,7 @@ def _fused_kernel(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref, rr_ref,
     def body(i, carry):
         carry, (ep_flit, ep_valid, waiting) = ref.fused_cycle_body(
             i, carry, route, link_src, link_dst, port_ep, ep_attach,
-            ep_space, cycle0, n_cycles)
+            ep_space, cycle0, n_cycles, vc_out=vc_out, n_vcs=n_vcs)
         sl = (pl.dslice(0, 1), pl.dslice(i, 1))
         pl.store(deliver_f_ref, (*sl, slice(None), slice(None)),
                  ep_flit[None, None])
@@ -279,25 +324,46 @@ def _fused_kernel(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref, rr_ref,
         out_ref[...] = val[None]
 
 
+def _fused_kernel(*refs, n_cycles: int):
+    """Default (VC-less) fused kernel: the historical operand list."""
+    _fused_impl(*refs, vc_out=None, n_cycles=n_cycles, n_vcs=1)
+
+
+def _fused_kernel_vc(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref,
+                     rr_ref, wh_ref, eg_ref, eg_ready_ref, eg_head_ref,
+                     eg_cnt_ref, route_ref, vc_out_ref, *rest,
+                     n_cycles: int, n_vcs: int):
+    """VC fused kernel: ``vc_out`` rides as one extra table operand after
+    ``route``; everything else is the shared body."""
+    _fused_impl(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref, rr_ref,
+                wh_ref, eg_ref, eg_ready_ref, eg_head_ref, eg_cnt_ref,
+                route_ref, *rest, vc_out=vc_out_ref[...], n_cycles=n_cycles,
+                n_vcs=n_vcs)
+
+
 def router_cycles_fused_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr,
                                wh_lock, eg, eg_ready, eg_head, eg_cnt,
                                route, link_src, link_dst, port_ep, ep_attach,
                                ep_space, cycle0, n_cycles: int, *,
-                               interpret: bool = False):
+                               interpret: bool = False, vc_out=None,
+                               n_vcs: int = 1):
     """``n_cycles`` fused fabric cycles, one program per channel.
 
     Inputs are channel-batched state (+ the circular egress queues ``eg``
     [C, E, Q, NF] / ``eg_ready`` [C, E, Q] / ``eg_head``/``eg_cnt``
     [C, E]); ``cycle0`` is the window's first cycle number (traced scalar).
     The state inputs are aliased onto the outputs (donated in place).
-    Returns ``(state'..., eg'..., ep_flit [C, N, E, NF],
-    ep_valid [C, N, E], req_waiting [C, N, E])`` — identical, bit for bit,
-    to ``ref.router_cycles_scan`` vmapped over channels.
+    With ``n_vcs > 1`` the P axis is slot-level and ``vc_out`` [R, P, Pp]
+    rides along as one extra shared table. Returns ``(state'..., eg'...,
+    ep_flit [C, N, E, NF], ep_valid [C, N, E], req_waiting [C, N, E])`` —
+    identical, bit for bit, to ``ref.router_cycles_scan`` vmapped over
+    channels.
     """
     C, R, P = in_cnt.shape
     Din = in_buf.shape[-2]
     Dout = out_buf.shape[-2]
     E, Q = eg_ready.shape[-2:]
+    Pp = P // n_vcs  # physical ports (== P when n_vcs == 1)
     i32 = jnp.int32
     N = n_cycles
 
@@ -330,14 +396,21 @@ def router_cycles_fused_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr,
         chan_spec(E),
     ]
 
+    if n_vcs == 1:
+        kern = functools.partial(_fused_kernel, n_cycles=N)
+        vc_tables, vc_specs = [], []
+    else:
+        kern = functools.partial(_fused_kernel_vc, n_cycles=N, n_vcs=n_vcs)
+        vc_tables, vc_specs = [vc_out], [full_spec(R, P, Pp)]
     outs = pl.pallas_call(
-        functools.partial(_fused_kernel, n_cycles=N),
+        kern,
         grid=(C,),
         in_specs=state_specs + [
             full_spec(R, E),  # route
-            full_spec(R, P, 2),  # link_src
-            full_spec(R, P, 2),  # link_dst
-            full_spec(R, P),  # port_ep
+            *vc_specs,  # vc_out (V > 1 only)
+            full_spec(R, Pp, 2),  # link_src (physical ports)
+            full_spec(R, Pp, 2),  # link_dst
+            full_spec(R, P),  # port_ep (slot-level)
             full_spec(E, 2),  # ep_attach
             chan_spec(E),  # ep_space
             full_spec(1),  # cycle0
@@ -356,6 +429,6 @@ def router_cycles_fused_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr,
         interpret=interpret,
     )(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
       eg, eg_ready, eg_head, eg_cnt,
-      route, link_src, link_dst, port_ep, ep_attach, ep_space,
+      route, *vc_tables, link_src, link_dst, port_ep, ep_attach, ep_space,
       jnp.reshape(jnp.asarray(cycle0, i32), (1,)))
     return outs

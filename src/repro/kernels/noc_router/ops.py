@@ -61,16 +61,27 @@ def _interp(interpret):
 def router_cycle(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                  route, link_src, link_dst, port_ep, ep_attach, ep_space,
                  *, backend: str = "jnp", interpret=None,
-                 router_tile: int = 1, fused_fifo: bool = False):
+                 router_tile: int = 1, fused_fifo: bool = False,
+                 vc_out=None, n_vcs: int = 1):
     """One cycle of every channel at once on the selected backend.
 
     State arrays are channel-batched ([C, R, P, ...]); tables are shared
     ([R, ...] / [E, 2]); ``ep_space`` [C, E]. Returns
     ``(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
-    ep_flit [C, E, NF], ep_valid [C, E])``.
+    ep_flit [C, E, NF], ep_valid [C, E])``. ``n_vcs > 1`` selects the
+    virtual-channel datapath (state P axis = physical ports * n_vcs,
+    ``vc_out`` [R, P, P_phys] the dateline VC-switch table shared across
+    channels); the default leaves every historical call bit-identical.
     """
     if backend == "jnp":
-        fn = _cycle_jnp_fused if fused_fifo else _cycle_jnp
+        if n_vcs > 1:
+            fn = jax.vmap(
+                functools.partial(router_cycle_reference, fused=fused_fifo,
+                                  vc_out=vc_out, n_vcs=n_vcs),
+                in_axes=(0, 0, 0, 0, 0, 0, None, None, None, None, None, 0),
+            )
+        else:
+            fn = _cycle_jnp_fused if fused_fifo else _cycle_jnp
         return fn(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                   route, link_src, link_dst, port_ep, ep_attach, ep_space)
     if backend == "pallas":
@@ -79,7 +90,8 @@ def router_cycle(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                                    port_ep, ep_attach, ep_space,
                                    router_tile=router_tile,
                                    fused_fifo=fused_fifo,
-                                   interpret=_interp(interpret))
+                                   interpret=_interp(interpret),
+                                   vc_out=vc_out, n_vcs=n_vcs)
     raise ValueError(f"unknown router backend {backend!r}; expected one of {BACKENDS}")
 
 
@@ -97,7 +109,8 @@ def router_cycles_fused(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                         eg, eg_ready, eg_head, eg_cnt,
                         route, link_src, link_dst, port_ep, ep_attach,
                         ep_space, cycle0, n_cycles: int, *,
-                        backend: str = "jnp", interpret=None):
+                        backend: str = "jnp", interpret=None,
+                        vc_out=None, n_vcs: int = 1):
     """``n_cycles`` fused fabric cycles with egress injection threaded in.
 
     Same array contract as :func:`router_cycle` plus this channel-batched
@@ -111,7 +124,16 @@ def router_cycles_fused(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     ``ref.fused_cycle_body``).
     """
     if backend == "jnp":
-        carry, (ep_flit, ep_valid, waiting) = _cycles_scan_jnp(
+        if n_vcs > 1:
+            scan_fn = jax.vmap(
+                functools.partial(router_cycles_scan, vc_out=vc_out,
+                                  n_vcs=n_vcs),
+                in_axes=(0,) * 10 + (None,) * 5 + (0, None, None),
+                out_axes=(0, 0),
+            )
+        else:
+            scan_fn = _cycles_scan_jnp
+        carry, (ep_flit, ep_valid, waiting) = scan_fn(
             in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
             eg, eg_ready, eg_head, eg_cnt,
             route, link_src, link_dst, port_ep, ep_attach,
@@ -122,5 +144,6 @@ def router_cycles_fused(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
             in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
             eg, eg_ready, eg_head, eg_cnt,
             route, link_src, link_dst, port_ep, ep_attach,
-            ep_space, cycle0, n_cycles, interpret=_interp(interpret))
+            ep_space, cycle0, n_cycles, interpret=_interp(interpret),
+            vc_out=vc_out, n_vcs=n_vcs)
     raise ValueError(f"unknown router backend {backend!r}; expected one of {BACKENDS}")

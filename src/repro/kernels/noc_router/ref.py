@@ -121,7 +121,7 @@ class ArbDecisions(NamedTuple):
 
 
 def arb_decisions(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
-                  depth_out: int) -> ArbDecisions:
+                  depth_out: int, vc_out=None, n_vcs: int = 1) -> ArbDecisions:
     """Round-robin output arbitration from the cycle-start snapshot.
 
     Inputs are single-channel: ``in_buf`` [R, P, Din, NF], counters and
@@ -132,6 +132,14 @@ def arb_decisions(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
     output-buffer space (no same-cycle fall-through). A granted tail flit
     releases the wormhole lock; a granted body flit locks the output to its
     input port.
+
+    With ``n_vcs > 1`` the port axis P is *slot*-level (physical port *
+    n_vcs + vc) and ``vc_out`` [R, P, P_phys] assigns the departing VC:
+    the routing table still yields a physical out port, which expands to
+    output slot ``phys * n_vcs + vc_out[r, slot_in, phys]`` (dateline
+    VC-switching). Arbitration then runs unchanged over slots — each
+    output slot has its own round-robin pointer and wormhole lock, so
+    wormholes on different VCs of one physical link interleave safely.
     """
     P = in_cnt.shape[-1]
     Din = in_buf.shape[-2]
@@ -139,6 +147,11 @@ def arb_decisions(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
     h = heads(in_buf)  # [R, P, NF]
     h_valid = in_cnt > 0
     req_port = jnp.take_along_axis(route, jnp.clip(h[..., F_DST], 0, None), axis=1)
+    if n_vcs > 1:
+        Pp = P // n_vcs
+        vout = jnp.take_along_axis(
+            vc_out, jnp.clip(req_port, 0, Pp - 1)[..., None], axis=-1)[..., 0]
+        req_port = req_port * n_vcs + vout
     req_port = jnp.where(h_valid, req_port, -1)  # [R, P_in]
 
     pout = jnp.arange(P)
@@ -174,7 +187,8 @@ def arb_decisions(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
     return ArbDecisions(arb_pop, granted, chosen, rr, wh, in_space)
 
 
-def link_inputs(out_heads_all, out_valid_all, link_src, in_space):
+def link_inputs(out_heads_all, out_valid_all, link_src, in_space,
+                n_vcs: int = 1):
     """Link-traversal decisions for this router's *input* side.
 
     ``out_heads_all`` [R_all, P, NF] / ``out_valid_all`` [R_all, P] are the
@@ -182,18 +196,44 @@ def link_inputs(out_heads_all, out_valid_all, link_src, in_space):
     and ``in_space`` [R, P] describe this router block. Returns
     ``(up_head [R, P, NF], link_accept [R, P])``: the upstream head feeding
     each input port and whether it is accepted this cycle.
+
+    With ``n_vcs > 1`` the physical wire still moves one flit per cycle:
+    each in-link folds the V upstream output slots onto it and accepts the
+    *lowest eligible VC first* (eligible = upstream head valid and this
+    VC's input FIFO has space). A flit stays on its VC across the wire —
+    VC switching happens only at arbitration — so slot (p, v) can only
+    receive from upstream output slot (src_p, v). Fixed-priority among
+    eligible candidates always moves some flit, so sharing cannot deadlock
+    the wire.
     """
-    R_all, P = out_valid_all.shape
-    src_r, src_p = link_src[..., 0], link_src[..., 1]
+    if n_vcs == 1:
+        R_all, P = out_valid_all.shape
+        src_r, src_p = link_src[..., 0], link_src[..., 1]
+        have_up = src_r >= 0
+        sr = jnp.clip(src_r, 0, R_all - 1)
+        sp = jnp.clip(src_p, 0, P - 1)
+        up_head = out_heads_all[sr, sp]
+        up_valid = out_valid_all[sr, sp] & have_up
+        return up_head, up_valid & in_space
+    V = n_vcs
+    R_all, PV = out_valid_all.shape
+    Pp = link_src.shape[-2]
+    src_r, src_p = link_src[..., 0], link_src[..., 1]  # [R, Pp]
     have_up = src_r >= 0
-    sr = jnp.clip(src_r, 0, R_all - 1)
-    sp = jnp.clip(src_p, 0, P - 1)
-    up_head = out_heads_all[sr, sp]
-    up_valid = out_valid_all[sr, sp] & have_up
-    return up_head, up_valid & in_space
+    sr = jnp.clip(src_r, 0, R_all - 1)[..., None]  # [R, Pp, 1]
+    slot = jnp.clip(src_p, 0, Pp - 1)[..., None] * V + jnp.arange(V)
+    up_heads = out_heads_all[sr, slot]  # [R, Pp, V, NF]
+    up_valid = out_valid_all[sr, slot] & have_up[..., None]  # [R, Pp, V]
+    space = in_space.reshape(*in_space.shape[:-1], Pp, V)
+    elig = up_valid & space
+    chosen_v = jnp.argmax(elig, axis=-1)  # first eligible VC (lowest wins)
+    accept = elig & (jnp.arange(V) == chosen_v[..., None])
+    up_head = up_heads.reshape(*in_space.shape, NF)
+    return up_head, accept.reshape(in_space.shape)
 
 
-def sent_mask(out_valid, link_dst, port_ep, in_space_all, ep_space):
+def sent_mask(out_valid, link_dst, port_ep, in_space_all, ep_space,
+              n_vcs: int = 1):
     """Which of this router's output heads leave the buffer this cycle.
 
     A head is sent either over a live link — iff the downstream input FIFO
@@ -204,13 +244,33 @@ def sent_mask(out_valid, link_dst, port_ep, in_space_all, ep_space):
     (dst_r, dst_p), downstream ``link_accept`` is
     ``out_valid[r, p] & in_space_all[dst_r, dst_p]`` because this port *is*
     the upstream of that input.
+
+    With ``n_vcs > 1`` the link leg recomputes ``link_inputs``'s
+    lowest-eligible-VC-first choice from the upstream side — same snapshot,
+    same winner — so exactly the accepted slot's head is popped. Endpoint
+    slots are VC0-only (slot-level ``port_ep``), so the ep leg is
+    unchanged.
     """
-    R_all, P = in_space_all.shape
     E = ep_space.shape[0]
     dst_r, dst_p = link_dst[..., 0], link_dst[..., 1]
     to_router = dst_r >= 0
-    down_space = in_space_all[jnp.clip(dst_r, 0, R_all - 1), jnp.clip(dst_p, 0, P - 1)]
-    sent_link = to_router & out_valid & down_space
+    if n_vcs == 1:
+        R_all, P = in_space_all.shape
+        down_space = in_space_all[jnp.clip(dst_r, 0, R_all - 1),
+                                  jnp.clip(dst_p, 0, P - 1)]
+        sent_link = to_router & out_valid & down_space
+    else:
+        V = n_vcs
+        R_all, PV = in_space_all.shape
+        Pp = link_dst.shape[-2]
+        dr = jnp.clip(dst_r, 0, R_all - 1)[..., None]  # [R, Pp, 1]
+        slot = jnp.clip(dst_p, 0, Pp - 1)[..., None] * V + jnp.arange(V)
+        down_space = in_space_all[dr, slot]  # [R, Pp, V]
+        ov = out_valid.reshape(*out_valid.shape[:-1], Pp, V)
+        elig = ov & down_space & to_router[..., None]
+        chosen_v = jnp.argmax(elig, axis=-1)
+        sent_link = (elig & (jnp.arange(V) == chosen_v[..., None])
+                     ).reshape(out_valid.shape)
     has_ep = port_ep >= 0
     ep_ok = ep_space[jnp.clip(port_ep, 0, E - 1)]
     sent_ep = has_ep & out_valid & ep_ok
@@ -236,7 +296,8 @@ def apply_cycle(in_buf, in_cnt, out_buf, out_cnt, arb_pop, granted, chosen,
 
 def router_cycle_reference(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                            route, link_src, link_dst, port_ep, ep_attach,
-                           ep_space, fused: bool = False):
+                           ep_space, fused: bool = False, vc_out=None,
+                           n_vcs: int = 1):
     """One cycle of a single channel over the full fabric (reference).
 
     All state is single-channel ([R, P, ...]); ``ep_space`` [E] is the
@@ -245,16 +306,21 @@ def router_cycle_reference(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     ep_valid [E])``. This is the extracted body of the original
     ``engine._cycle_one`` and the bit-exact specification the Pallas
     backend is tested against. ``fused`` selects the fused FIFO datapath
-    (the fast/Pallas default; identical on live slots).
+    (the fast/Pallas default; identical on live slots). ``n_vcs > 1``
+    selects the virtual-channel datapath (folded slot axis P = phys *
+    n_vcs, ``vc_out`` the dateline table); endpoint delivery/injection is
+    slot-level already (endpoints attach at VC0), so it needs no branch.
     """
     arb = arb_decisions(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
-                        depth_out=out_buf.shape[-2])
+                        depth_out=out_buf.shape[-2], vc_out=vc_out,
+                        n_vcs=n_vcs)
 
     out_heads = heads(out_buf)
     out_valid = out_cnt > 0
     up_head, link_accept = link_inputs(out_heads, out_valid, link_src,
-                                       arb.in_space)
-    sent = sent_mask(out_valid, link_dst, port_ep, arb.in_space, ep_space)
+                                       arb.in_space, n_vcs=n_vcs)
+    sent = sent_mask(out_valid, link_dst, port_ep, arb.in_space, ep_space,
+                     n_vcs=n_vcs)
 
     in2, in_cnt2, out2, out_cnt2 = apply_cycle(
         in_buf, in_cnt, out_buf, out_cnt, arb.arb_pop, arb.granted, arb.chosen,
@@ -292,7 +358,8 @@ def inject_endpoints(in_buf, in_cnt, er, ep_p, port_ep, flit, want):
 
 
 def fused_cycle_body(i, carry, route, link_src, link_dst, port_ep, ep_attach,
-                     ep_space, cycle0, n_cycles: int):
+                     ep_space, cycle0, n_cycles: int, vc_out=None,
+                     n_vcs: int = 1):
     """One cycle of the fused multi-cycle window (single channel).
 
     ``carry`` holds the fabric state plus this channel's endpoint egress
@@ -317,7 +384,8 @@ def fused_cycle_body(i, carry, route, link_src, link_dst, port_ep, ep_attach,
     (in_buf, in_cnt, out_buf, out_cnt, rr, wh, ep_flit, ep_valid) = (
         router_cycle_reference(in_buf, in_cnt, out_buf, out_cnt, rr, wh,
                                route, link_src, link_dst, port_ep, ep_attach,
-                               ep_space, fused=True))
+                               ep_space, fused=True, vc_out=vc_out,
+                               n_vcs=n_vcs))
 
     Q = eg_ready.shape[-1]
     head_flit = jnp.take_along_axis(eg, eg_head[:, None, None], axis=1)[:, 0]
@@ -336,7 +404,8 @@ def fused_cycle_body(i, carry, route, link_src, link_dst, port_ep, ep_attach,
 def router_cycles_scan(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                        eg, eg_ready, eg_head, eg_cnt,
                        route, link_src, link_dst, port_ep, ep_attach,
-                       ep_space, cycle0, n_cycles: int):
+                       ep_space, cycle0, n_cycles: int, vc_out=None,
+                       n_vcs: int = 1):
     """``n_cycles`` of ``fused_cycle_body`` as a lax.scan (single channel).
 
     The jnp reference for the fused Pallas kernel: same body, same order.
@@ -348,6 +417,7 @@ def router_cycles_scan(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
 
     def body(carry, i):
         return fused_cycle_body(i, carry, route, link_src, link_dst, port_ep,
-                                ep_attach, ep_space, cycle0, n_cycles)
+                                ep_attach, ep_space, cycle0, n_cycles,
+                                vc_out=vc_out, n_vcs=n_vcs)
 
     return jax.lax.scan(body, carry0, jnp.arange(n_cycles))
