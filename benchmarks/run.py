@@ -88,7 +88,8 @@ def main() -> None:
             # requested axis; each row carries its *effective* backend
             json.dump({"smoke": args.smoke, "full": args.full,
                        "backend": args.backend or "jnp",
-                       "rows": all_rows}, f, indent=1, default=str)
+                       "rows": all_rows}, f, indent=1, default=str,
+                      sort_keys=True)
     print(f"\n# paper-validation: {n_ok}/{n_checked} targets matched", flush=True)
     if failed:
         print("# failed targets:", ", ".join(failed))

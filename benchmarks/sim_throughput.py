@@ -27,6 +27,7 @@ state outside the timed region instead of re-feeding one ``st0``.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -35,8 +36,7 @@ import numpy as np
 from benchmarks.common import row
 from repro.core.noc import sim as S
 from repro.core.noc import traffic as T
-from repro.core.noc.params import NocParams
-from repro.core.noc.topology import Topology, build_mesh, build_multi_die, build_torus
+from repro.core.noc.spec import FabricSpec, preset
 
 BASELINE_CYC_PER_S = 1400  # seed engine, steady state, 8x4 mesh / 2000 cycles
 SWEEP_SPEEDUP_TARGET = 3.0  # vmapped sweep vs sequential per-config compiles
@@ -59,21 +59,21 @@ SCALING_MESHES = [
 ]
 SCALING_MESHES_FULL = SCALING_MESHES + [(64, 64, 64, 8)]
 
-# the --topology axis: every shape the engine must keep simulating (smoke
-# runs one torus and one multi-die config; --full also times them)
+# the --topology axis: every shape the engine must keep simulating, as
+# declarative FabricSpecs (smoke runs one torus and one multi-die config;
+# --full also times them)
 SMOKE_TOPOLOGIES = [
-    ("torus", lambda: build_torus(nx=4, ny=2)),
-    ("multi_die", lambda: build_multi_die(n_dies=2, nx=2, ny=2, d2d=2)),
+    ("torus", FabricSpec(topology="torus", nx=4, ny=2)),
+    ("multi_die", FabricSpec(topology="multi_die", n_dies=2, nx=2, ny=2, d2d=2)),
 ]
 FULL_TOPOLOGIES = [
-    ("torus", lambda: build_torus(nx=4, ny=8)),
-    ("multi_die", lambda: build_multi_die(n_dies=2, nx=2, ny=8, d2d=3)),
+    ("torus", FabricSpec(topology="torus", nx=4, ny=8)),
+    ("multi_die", FabricSpec(topology="multi_die", n_dies=2, nx=2, ny=8, d2d=3)),
 ]
 
 
-def _measure(params: NocParams, streams: int, n_cycles: int, iters: int,
-             topo: Topology | None = None):
-    topo = build_mesh(nx=4, ny=8) if topo is None else topo
+def _measure(spec: FabricSpec, streams: int, n_cycles: int, iters: int):
+    topo, params = spec.lower()
     wl = T.dma_workload(topo, "uniform", transfer_kb=8, n_txns=4, streams=streams)
     sim = S.build_sim(topo, params, wl)
     t0 = time.perf_counter()
@@ -94,8 +94,7 @@ def _measure(params: NocParams, streams: int, n_cycles: int, iters: int,
 def _sweep_speedup(n_configs: int, n_cycles: int):
     """Wall-clock of N pattern x size configs: sequential per-config Sims
     (one compile each) vs one vmapped run_sweep (compiles once)."""
-    topo = build_mesh(nx=4, ny=4)
-    params = NocParams()
+    topo, params = preset("mesh").lower()
     pats = ["uniform", "shuffle", "bit-complement", "transpose", "neighbor",
             "tiled-matmul"]
     wls = [T.dma_workload(topo, p, transfer_kb=kb, n_txns=4)
@@ -120,11 +119,13 @@ def _backend_rows(n_cycles: int) -> list[dict]:
     grid becomes a scanned loop), so it trades simulated throughput for
     exercising the exact kernel dataflow — CI pins its equivalence here.
     """
-    topo = build_mesh(nx=4, ny=2)
+    topo = FabricSpec(topology="mesh", nx=4, ny=2).build_topology()
     wl = T.dma_workload(topo, "uniform", transfer_kb=1, n_txns=2)
     rows, done = [], {}
     for backend in ("jnp", "pallas"):
-        sim = S.build_sim(topo, NocParams(backend=backend), wl)
+        params = FabricSpec(topology="mesh", nx=4, ny=2,
+                            backend=backend).params()
+        sim = S.build_sim(topo, params, wl)
         t0 = time.perf_counter()
         r = S.run(sim, n_cycles, state=sim.init_state())
         jax.block_until_ready(r.cycle)
@@ -152,14 +153,16 @@ def _scaling_point(nx: int, ny: int, n_cycles: int, k: int,
     per-cycle jnp scan vs the fast path vs fused k-cycle super-steps,
     plus the fast-vs-naive canonical-SimState bit-identity pin (the fast
     path must be a pure speedup over the reference datapath)."""
-    topo = build_mesh(nx=nx, ny=ny)
+    base = FabricSpec(topology="mesh", nx=nx, ny=ny)
+    topo = base.build_topology()
     wl = T.dma_workload(topo, "uniform", transfer_kb=8, n_txns=4)
     tag = f"sim_throughput/scaling_{nx}x{ny}"
     rows: list[dict] = []
     cps, finals = {}, {}
-    for impl, params in (("naive", NocParams(step_impl="naive")),
-                         ("fast", NocParams()),
-                         (f"fused{k}", NocParams(fused_cycles=k))):
+    for impl, params in (
+            ("naive", dataclasses.replace(base, step_impl="naive").params()),
+            ("fast", base.params()),
+            (f"fused{k}", dataclasses.replace(base, fused_cycles=k).params())):
         sim = S.build_sim(topo, params, wl)
         r = S.run(sim, n_cycles, state=sim.init_state())  # compile + warmup
         jax.block_until_ready(r.cycle)
@@ -223,7 +226,8 @@ def bench(full: bool = False, smoke: bool = False,
         t_seq, t_sweep, n = _sweep_speedup(n_configs=3, n_cycles=100)
         rows.append(row(f"sim_throughput/sweep{n}_smoke_speedup_x",
                         t_sweep * 1e6, round(t_seq / t_sweep, 2)))
-        compile_s, cps = _measure(NocParams(), streams=1, n_cycles=400, iters=1)
+        compile_s, cps = _measure(preset("mesh", big=True), streams=1,
+                                  n_cycles=400, iters=1)
         rows.append(row("sim_throughput/8x4_smoke/compile_s", compile_s * 1e6,
                         round(compile_s, 2)))
         # cycles/s floor: the fast path must stay above the pre-refactor
@@ -232,10 +236,11 @@ def bench(full: bool = False, smoke: bool = False,
                         round(cps), target=BASELINE_CYC_PER_S, cmp="ge"))
         # topology axis: one torus and one multi-die config must stay green
         # (on the selected backend, so the pallas CI lane replays the zoo)
-        for tname, mk in SMOKE_TOPOLOGIES:
-            topo = mk()
+        for tname, sp in SMOKE_TOPOLOGIES:
+            sp = dataclasses.replace(sp, backend=backend or "jnp")
+            topo, params = sp.lower()
             wl = T.dma_workload(topo, "uniform", transfer_kb=1, n_txns=2)
-            sim = S.build_sim(topo, NocParams(backend=backend or "jnp"), wl)
+            sim = S.build_sim(topo, params, wl)
             out = S.stats(sim, S.run(sim, 300))
             nt = topo.meta["n_tiles"]
             rows.append(row(f"sim_throughput/{tname}_smoke/dma_done", 0.0,
@@ -244,23 +249,23 @@ def bench(full: bool = False, smoke: bool = False,
         if backend:
             rows += _backend_rows(n_cycles=150)
         return rows
-    compile_s, cps = _measure(NocParams(), streams=1, n_cycles=n_cycles, iters=iters)
+    compile_s, cps = _measure(preset("mesh", big=True), streams=1,
+                              n_cycles=n_cycles, iters=iters)
     rows.append(row("sim_throughput/8x4/compile_s", compile_s * 1e6,
                     round(compile_s, 2)))
     rows.append(row("sim_throughput/8x4/cycles_per_s", 0.0, round(cps),
                     target=BASELINE_CYC_PER_S, cmp="ge"))
     # channel scaling: trace size is channel-count independent, so extra wide
     # channels must not blow up compile time (runtime grows with state size)
-    c4, cps4 = _measure(NocParams(n_channels=4), streams=2,
+    c4, cps4 = _measure(preset("mesh", big=True, n_channels=4), streams=2,
                         n_cycles=n_cycles, iters=iters)
     rows.append(row("sim_throughput/8x4_c4/compile_s", c4 * 1e6, round(c4, 2),
                     target=round(3 * max(compile_s, 0.1), 2), cmp="le"))
     rows.append(row("sim_throughput/8x4_c4/cycles_per_s", 0.0, round(cps4)))
     # topology axis: simulated throughput of the zoo shapes (same engine,
     # different tables/router counts — multi_die carries repeater routers)
-    for tname, mk in FULL_TOPOLOGIES:
-        ct, cpst = _measure(NocParams(), streams=1, n_cycles=n_cycles,
-                            iters=iters, topo=mk())
+    for tname, sp in FULL_TOPOLOGIES:
+        ct, cpst = _measure(sp, streams=1, n_cycles=n_cycles, iters=iters)
         rows.append(row(f"sim_throughput/{tname}/cycles_per_s", 0.0,
                         round(cpst)))
     # vmapped multi-config sweep: N configs through one jit-compiled scan
@@ -318,6 +323,6 @@ if __name__ == "__main__":
         with open(args.json, "w") as f:
             json.dump({"smoke": args.smoke, "full": args.full,
                        "scaling": curve, "rows": all_rows}, f, indent=1,
-                      default=str)
+                      default=str, sort_keys=True)
     if bad:
         raise SystemExit("failed targets: " + ", ".join(bad))

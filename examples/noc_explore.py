@@ -11,6 +11,7 @@ Run:  PYTHONPATH=src python examples/noc_explore.py [--pattern uniform]
       PYTHONPATH=src python examples/noc_explore.py --sweep
       PYTHONPATH=src python examples/noc_explore.py --topology torus --collectives
       PYTHONPATH=src python examples/noc_explore.py --workload moe
+      PYTHONPATH=src python examples/noc_explore.py --dse --json frontier.json
 """
 import argparse
 
@@ -20,28 +21,23 @@ from repro.core.noc import collective_traffic as CT
 from repro.core.noc import ml_traffic as ML
 from repro.core.noc import sim as S
 from repro.core.noc import traffic as T
-from repro.core.noc.params import NocParams
-from repro.core.noc.topology import TOPOLOGIES, build_mesh, build_occamy, build_topology
+from repro.core.noc.spec import preset
+from repro.core.noc.topology import TOPOLOGIES
 
-# demo-sized instances of each zoo topology (~16 tiles; "big" ~32)
-DEMO_KW = {
-    "mesh": dict(nx=4, ny=4),
-    "torus": dict(nx=4, ny=4),
-    "multi_die": dict(n_dies=2, nx=2, ny=4),
-    "occamy": {},
-}
-DEMO_KW_BIG = {**DEMO_KW, "mesh": dict(nx=4, ny=8), "torus": dict(nx=4, ny=8),
-               "multi_die": dict(n_dies=2, nx=2, ny=8)}
+# every demo fabric is a declarative FabricSpec (docs/FABRIC_SPEC.md):
+# spec.preset(name, big=...) replaces the old per-example kwargs tables,
+# and .lower() hands back the (Topology, NocParams) pair bit-identical to
+# the hand-built zoo
 
 
 def make_topo(name: str, big: bool = False):
-    return build_topology(name, **(DEMO_KW_BIG if big else DEMO_KW)[name])
+    return preset(name, big=big).build_topology()
 
 
 def pattern_sweep(pattern: str, topology: str = "mesh", backend: str = "jnp"):
     """Utilization vs transfer size — all sizes batched through ONE
     jit-compiled vmapped scan (run_sweep) instead of one compile per size."""
-    topo = make_topo(topology, big=True)
+    topo, params = preset(topology, big=True, backend=backend).lower()
     if topo.tile_coord is None:
         raise SystemExit(f"{topology} has no grid coordinates; "
                          "use --collectives for the Occamy demos")
@@ -49,7 +45,7 @@ def pattern_sweep(pattern: str, topology: str = "mesh", backend: str = "jnp"):
     sizes = (1, 4, 16, 32)
     wls = [T.dma_workload(topo, pattern, transfer_kb=kb, n_txns=4)
            for kb in sizes]
-    sim = S.build_sim(topo, NocParams(backend=backend), wls[0])
+    sim = S.build_sim(topo, params, wls[0])
     sts = S.run_sweep(sim, wls, 3000 + 1200 * max(sizes))
     nt = topo.meta["n_tiles"]
     for kb, st in zip(sizes, sts):
@@ -66,8 +62,7 @@ def collectives_demo(topology: str = "mesh", backend: str = "jnp"):
     collective bandwidth at paper frequency. Works on every zoo topology;
     Occamy (no grid coordinates) runs the 1-D ring family over its
     clusters instead of the 2-D dimension-ordered schedule."""
-    topo = make_topo(topology)
-    params = NocParams(backend=backend)
+    topo, params = preset(topology, backend=backend).lower()
     n = topo.meta["n_tiles"]
     gridded = topo.tile_coord is not None and "nx" in topo.meta
     print(f"== collectives on {topo.name} ({n} tiles, 16 kB, wide links) ==")
@@ -107,13 +102,12 @@ def workload_demo(workload: str, topology: str = "mesh",
 
     if topology not in ("mesh", "torus"):
         raise SystemExit("--workload demos run on mesh or torus")
-    topo = make_topo(topology)
+    topo, params = preset(topology, backend=backend).lower()
     cfg = get_config("llama4-scout-17b-a16e").reduced()
     par_kw, tokens = ML.DEMO_SPECS[workload]  # shared with collective_bench
     par = ML.ParallelismSpec(**par_kw)
     phases = ML.compile_traffic(cfg, par, topo, tokens_per_device=tokens,
                                 sim_cap_kb=16, workloads=[workload])
-    params = NocParams(backend=backend)
     print(f"== {workload} traffic of {cfg.name} on {topo.name} "
           f"(dp={par.dp} tp={par.tp} pp={par.pp} ep={par.ep}) ==")
     for ph in phases:
@@ -134,11 +128,10 @@ def sweep_demo(topology: str = "mesh", backend: str = "jnp"):
 
     import jax
 
-    topo = make_topo(topology)
+    topo, params = preset(topology, backend=backend).lower()
     if topo.tile_coord is None:
         raise SystemExit(f"{topology} has no grid coordinates; "
                          "use --collectives for the Occamy demos")
-    params = NocParams(backend=backend)
     pats = ["uniform", "shuffle", "bit-complement", "transpose", "neighbor"]
     if topo.meta.get("n_hbm", 0):
         pats.append("tiled-matmul")
@@ -163,7 +156,7 @@ def sweep_demo(topology: str = "mesh", backend: str = "jnp"):
 
 def ordering_demo(backend: str = "jnp"):
     print("== end-to-end ordering (paper Sec. III/IV) ==")
-    topo = build_mesh(nx=4, ny=4)
+    topo = make_topo("mesh")
     for name, (order, streams, alt, uniq) in {
         "RoB-less, 1 stream, alternating dst": ("robless", 1, True, False),
         "RoB-less, 2 streams (multi-stream DMA)": ("robless", 2, False, True),
@@ -171,7 +164,8 @@ def ordering_demo(backend: str = "jnp"):
     }.items():
         wl = T.ordering_workload(topo, streams=streams, alternate=alt,
                                  unique_txn=uniq, n_txns=16, transfer_kb=1)
-        sim = S.build_sim(topo, NocParams(ni_order=order, backend=backend), wl)
+        params = preset("mesh", ni_order=order, backend=backend).params()
+        sim = S.build_sim(topo, params, wl)
         out = S.stats(sim, S.run(sim, 4000))
         print(f"  {name:42s} done@cycle {out['last_rx'][0]:5d}  "
               f"NI stalls {out['ni_stalls'][0]:4d}")
@@ -179,18 +173,18 @@ def ordering_demo(backend: str = "jnp"):
 
 def hbm_comparison(backend: str = "jnp"):
     print("== full-load HBM utilization: FlooNoC mesh vs Occamy xbars ==")
-    mesh = build_mesh(nx=4, ny=8)
+    mesh, params = preset("mesh", big=True, backend=backend).lower()
     wl = T.hbm_workload(mesh, full_load=True, n_txns=8, transfer_kb=4)
-    sim = S.build_sim(mesh, NocParams(backend=backend), wl)
+    sim = S.build_sim(mesh, params, wl)
     out = S.stats(sim, S.run(sim, 16000))
-    p = NocParams()
+    p = params
     agg_f = out["beats_rcvd"][:32].sum() / max(out["last_rx"][:32].max(), 1) / p.hbm_rate / 8
 
     import dataclasses
 
     from repro.core.noc.endpoints import idle_workload
 
-    occ = build_occamy()
+    occ, params_o = preset("occamy", backend=backend).lower()
     nt = occ.meta["n_clusters"]
     wlo = idle_workload(occ.n_endpoints, n_tiles=nt)
     dd = np.full((occ.n_endpoints, 1), -1, np.int32)
@@ -198,7 +192,8 @@ def hbm_comparison(backend: str = "jnp"):
     for e in range(nt):
         dd[e, 0] = nt + (e % 8); dt[e, 0] = 8
     wlo = dataclasses.replace(wlo, dma_dst=dd, dma_txns=dt, dma_beats=64)
-    simo = S.build_sim(occ, NocParams(max_outstanding=4, backend=backend), wlo)
+    simo = S.build_sim(occ, dataclasses.replace(params_o, max_outstanding=4),
+                       wlo)
     outo = S.stats(simo, S.run(simo, 16000))
     agg_o = outo["beats_rcvd"][:nt].sum() / max(outo["last_rx"][:nt].max(), 1) / p.hbm_rate / 8
     print(f"  FlooNoC 8x4 mesh: {agg_f:5.1%} of HBM peak (paper: ~100%)")
@@ -209,11 +204,13 @@ def channel_sweep(counts, pattern: str, backend: str = "jnp"):
     """Sweep NocParams.n_channels: wide traffic stripes over the extra wide
     channels by TxnID, so multi-stream DMA gains wide-link bandwidth."""
     print(f"== {pattern}: n_channels sweep (2 DMA streams/tile, 8 kB reads) ==")
-    topo = build_mesh(nx=4, ny=8)
+    topo = make_topo("mesh", big=True)
     nt = topo.meta["n_tiles"]
     for c in counts:
         wl = T.dma_workload(topo, pattern, transfer_kb=8, n_txns=4, streams=2)
-        sim = S.build_sim(topo, NocParams(n_channels=c, backend=backend), wl)
+        params = preset("mesh", big=True, n_channels=c,
+                        backend=backend).params()
+        sim = S.build_sim(topo, params, wl)
         out = S.stats(sim, S.run(sim, 16000))
         beats = out["beats_rcvd"][:nt].astype(float)
         util = (beats / np.maximum(out["last_rx"][:nt], 1)).mean()
@@ -221,6 +218,41 @@ def channel_sweep(counts, pattern: str, backend: str = "jnp"):
         finish = out["last_rx"][:nt].max()
         print(f"  C={c} ({c - 2} wide): util={util:5.1%}  "
               f"done={done}/{nt * 2 * 4}  finished@cycle {finish}")
+
+
+def dse_demo(smoke: bool = False, json_path: str | None = None,
+             workers: int | None = None):
+    """Sharded design-space exploration over the default FabricSpec grid:
+    every point scored with simulator cycles + Fig. 9 area/energy, Pareto
+    frontier (perf/mm^2 vs pJ/B) emitted as a deterministic artifact."""
+    import json
+    import time
+
+    from repro.core.noc import dse
+
+    specs = dse.default_grid(smoke=smoke)
+    grid = "smoke" if smoke else "default"
+    print(f"== DSE: {len(specs)} spec points ({grid} grid), "
+          f"{len(dse.build_jobs(specs))} compile groups ==")
+    t0 = time.perf_counter()
+    results = dse.run_dse(specs, workers=workers, log=print)
+    art = dse.frontier_artifact(results, grid=grid)
+    dt = time.perf_counter() - t0
+    print(f"  {art['n_points']} points scored in {dt:.1f}s "
+          f"({art['n_delivered']} delivered, "
+          f"{len(art['frontier'])} on the Pareto frontier)")
+    print(f"  {'spec':12s} {'fabric':14s} {'workload':14s} "
+          f"{'cyc':>6s} {'GB/s':>8s} {'GB/s/mm2':>9s} {'pJ/B':>6s}")
+    for p in art["points"]:
+        if not p["pareto"]:
+            continue
+        print(f"  {p['spec_hash']:12s} {p['fabric']:14s} {p['workload']:14s} "
+              f"{p['cycles']:6d} {p['gbps']:8.1f} {p['gbps_per_mm2']:9.1f} "
+              f"{p['pj_per_byte']:6.3f}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(art, f, indent=1, sort_keys=True)
+        print(f"  frontier artifact -> {json_path}")
 
 
 if __name__ == "__main__":
@@ -239,12 +271,24 @@ if __name__ == "__main__":
                          "(ddp/tp/moe/pp) on the fabric")
     ap.add_argument("--sweep", action="store_true",
                     help="run the vmapped multi-config sweep demo")
+    ap.add_argument("--dse", action="store_true",
+                    help="run the sharded FabricSpec design-space "
+                         "exploration and print the Pareto frontier")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --dse: the small CI grid (4 points)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="with --dse: write the frontier artifact JSON")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="with --dse: process-pool width (default: one "
+                         "per core, capped at the group count)")
     ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
                     help="router-cycle compute backend (pallas = the "
                          "(C, R)-gridded kernel, interpret mode off TPU; "
                          "bit-identical to jnp)")
     args = ap.parse_args()
-    if args.channels:
+    if args.dse:
+        dse_demo(smoke=args.smoke, json_path=args.json, workers=args.workers)
+    elif args.channels:
         channel_sweep(args.channels, args.pattern, backend=args.backend)
     elif args.workload:
         workload_demo(args.workload, args.topology, backend=args.backend)

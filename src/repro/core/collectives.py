@@ -181,6 +181,16 @@ def multi_stream_sync(grads, cfg: SyncConfig, plan: BucketPlan | None = None,
 # ----------------------------------------------------------------------
 # Simulator-calibrated collective cycle model
 # ----------------------------------------------------------------------
+# Tolerance of the model on merged row-ring schedules (the regime the MoE
+# expert groups sit in on the torus): the per-VC serialization term is
+# calibrated on the full-fabric torus stress grid to <=10%
+# (tests/test_noc_vc.py), but when several row rings merge into one
+# all-to-all chain the model over-serializes the shared wrap edges, so
+# those rows track at this looser, pinned bar instead
+# (tests/test_noc_spec.py::test_merged_a2a_chain_tolerance).
+MERGED_A2A_CHAIN_RTOL = 0.20
+
+
 # Replaces bare hop-count guesses with link/serialization terms calibrated
 # against the cycle-level fabric (repro.core.noc): every constant below is
 # derived from the simulator's microarchitecture, and

@@ -2,15 +2,20 @@
 
 Public surface: :class:`NocParams` (microarchitecture + channel count +
 router compute backend), :class:`Topology` and the ``build_*`` topology-zoo
-builders behind :func:`build_topology`, with the full-system simulator in
-``repro.core.noc.sim`` (``build_sim`` / ``run`` / ``run_trace`` /
-``run_sweep``), workload builders in ``repro.core.noc.traffic`` /
-``collective_traffic``, and the ML-parallelism traffic compiler in
-``repro.core.noc.ml_traffic`` (DDP / TP / MoE / PP phases — see
-``docs/WORKLOADS.md``). See ``src/repro/core/noc/README.md`` and
-``docs/ARCHITECTURE.md`` for the paper-to-code map.
+builders behind :func:`build_topology`, the declarative :class:`FabricSpec`
+(``repro.core.noc.spec``: validate -> serialize -> lower, presets via
+:func:`preset`; schema reference in ``docs/FABRIC_SPEC.md``) with the
+sharded design-space driver in ``repro.core.noc.dse`` (``run_dse``), the
+full-system simulator in ``repro.core.noc.sim`` (``build_sim`` / ``run`` /
+``run_trace`` / ``run_sweep``), workload builders in
+``repro.core.noc.traffic`` / ``collective_traffic``, and the
+ML-parallelism traffic compiler in ``repro.core.noc.ml_traffic``
+(DDP / TP / MoE / PP phases — see ``docs/WORKLOADS.md``). See
+``src/repro/core/noc/README.md`` and ``docs/ARCHITECTURE.md`` for the
+paper-to-code map.
 """
 from repro.core.noc.params import NocParams
+from repro.core.noc.spec import FabricSpec, preset
 from repro.core.noc.topology import (
     TOPOLOGIES,
     Topology,
@@ -21,5 +26,6 @@ from repro.core.noc.topology import (
     build_torus,
 )
 
-__all__ = ["NocParams", "TOPOLOGIES", "Topology", "build_mesh",
-           "build_multi_die", "build_occamy", "build_topology", "build_torus"]
+__all__ = ["FabricSpec", "NocParams", "TOPOLOGIES", "Topology", "build_mesh",
+           "build_multi_die", "build_occamy", "build_topology", "build_torus",
+           "preset"]

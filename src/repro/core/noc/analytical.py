@@ -181,6 +181,68 @@ SOA_TABLE = {
                 "pj_per_b_hop": 0.15, "noc_area_pct": 3.5},
 }
 
+# ----------------------------------------------------------------------
+# Fig. 9 — fabric-level area / energy scoring (the DSE frontier axes)
+# ----------------------------------------------------------------------
+# mm^2 per kGE at GF 12LP+ NAND2-equivalent density (0.154 um^2 / GE);
+# puts the 256 kGE RoB at ~0.039 mm^2 — the same order as one router's
+# NoC share, which is the Fig. 10 story
+KGE_MM2 = 1.54e-4
+# per extra virtual channel: input-mux depth + per-VC FIFO switching adder
+# on the 0.15 pJ/B/hop calibration point (a modeling assumption — the
+# paper's routers are VC-less)
+VC_ENERGY_FACTOR = 0.05
+ROUTER_REF_RADIX = 5  # the Fig. 9 router: radix-5 (N/E/S/W/L)
+ROUTER_REF_CHANNELS = 3  # req / rsp / wide
+
+
+def router_area_mm2(radix: int = ROUTER_REF_RADIX,
+                    n_channels: int = ROUTER_REF_CHANNELS,
+                    n_vcs: int = 1) -> float:
+    """Router area scaled from the Fig. 9 tile split.
+
+    Anchor: the paper's radix-5, 3-channel, VC-less router occupies
+    ``NOC_TILE_FRACTION`` of a ``TILE_AREA_MM2`` tile, of which
+    ``ROUTER_BUFFER_FRACTION`` is SCM in/out buffers. Buffers scale with
+    the FIFO count (channels x VCs x ports), crossbar + arbitration with
+    channels x ports^2.
+    """
+    a0 = NOC_TILE_FRACTION * TILE_AREA_MM2
+    c = n_channels / ROUTER_REF_CHANNELS
+    r = radix / ROUTER_REF_RADIX
+    buffers = ROUTER_BUFFER_FRACTION * a0 * c * n_vcs * r
+    logic = (1.0 - ROUTER_BUFFER_FRACTION) * a0 * c * r * r
+    return buffers + logic
+
+
+def fabric_area_mm2(topo, params) -> float:
+    """NoC area of a lowered fabric (``Topology`` + ``NocParams``).
+
+    Sums :func:`router_area_mm2` at every router's *live* radix (wired
+    links + attached endpoints, so edge routers and express radix-9
+    routers are priced at their real port count, and multi-die / Occamy
+    repeaters count as radix-2 spill registers) plus one
+    :func:`ni_area_kge` network interface per endpoint.
+    """
+    import numpy as np
+
+    radix = np.asarray((topo.link_to[..., 0] >= 0).sum(axis=1))
+    for e, (r, p) in enumerate(topo.ep_attach):
+        radix[r] += 1
+    area = sum(router_area_mm2(int(k), params.n_channels, params.n_vcs)
+               for k in radix)
+    area += topo.n_endpoints * ni_area_kge(params.ni_order) * KGE_MM2
+    return float(area)
+
+
+def noc_pj_per_byte(mean_hops: float, n_vcs: int = 1,
+                    v: float = V_NOM) -> float:
+    """pJ per payload byte for traffic averaging ``mean_hops`` router
+    traversals (Fig. 9b energy point, with the VC adder above)."""
+    return (energy_per_byte_per_hop_pj(v) * mean_hops
+            * (1.0 + VC_ENERGY_FACTOR * (n_vcs - 1)))
+
+
 # Table II targets for validation
 TABLE_II = {
     "occamy": {"clusters": 24, "gflops": 438, "tt_ghz": 1.14, "die_mm2": 42.1,

@@ -180,6 +180,37 @@ def _cycle_witness(waits: dict):
     return None
 
 
+def required_vcs_for_pairs(topo: Topology, pairs) -> int:
+    """Minimum ``NocParams.n_vcs`` for concurrent wormhole transfers over
+    the given ``(src_ep, dst_ep)`` pairs to be deadlock-free.
+
+    The Dally-Seitz core of :func:`required_vcs`, usable for any traffic
+    description that reduces to a set of endpoint pairs (a collective
+    schedule's sends, a traffic pattern's destination map — the
+    ``FabricSpec`` validator calls it with the latter). Returns 1 / 2 /
+    a huge sentinel exactly as :func:`required_vcs` does.
+    """
+    if not topo.meta.get("wrap"):
+        return 1
+    port_ep = topo.port_ep
+    routes = [CT._route_links(topo, port_ep, int(src), int(dst))
+              for src, dst in pairs]
+    waits: dict = {}  # link -> set of links it can wait on
+    for route in routes:
+        for a, b in zip(route[:-1], route[1:]):
+            waits.setdefault(a, set()).add(b)
+    if _cycle_witness(waits) is None:
+        return 1
+    waits_vc: dict = {}  # (link, vc) -> set of (link, vc) it can wait on
+    for route in routes:
+        hops = list(zip(route, route_vcs(topo, route)))
+        for a, b in zip(hops[:-1], hops[1:]):
+            waits_vc.setdefault(a, set()).add(b)
+    if _cycle_witness(waits_vc) is None:
+        return 2
+    return 1 << 30  # no dateline VC assignment breaks the cycle
+
+
 def required_vcs(topo: Topology, sched) -> int:
     """Minimum ``NocParams.n_vcs`` for a schedule to be deadlock-free.
 
@@ -203,23 +234,7 @@ def required_vcs(topo: Topology, sched) -> int:
     es, ss, ks = np.nonzero(sched.dst_seq >= 0)
     pairs = {(int(e), int(sched.dst_seq[e, s, k]))
              for e, s, k in zip(es, ss, ks)}
-    port_ep = topo.port_ep
-    routes = [CT._route_links(topo, port_ep, src, dst)
-              for src, dst in pairs]
-    waits: dict = {}  # link -> set of links it can wait on
-    for route in routes:
-        for a, b in zip(route[:-1], route[1:]):
-            waits.setdefault(a, set()).add(b)
-    if _cycle_witness(waits) is None:
-        return 1
-    waits_vc: dict = {}  # (link, vc) -> set of (link, vc) it can wait on
-    for route in routes:
-        hops = list(zip(route, route_vcs(topo, route)))
-        for a, b in zip(hops[:-1], hops[1:]):
-            waits_vc.setdefault(a, set()).add(b)
-    if _cycle_witness(waits_vc) is None:
-        return 2
-    return 1 << 30  # no dateline VC assignment breaks the cycle
+    return required_vcs_for_pairs(topo, pairs)
 
 
 def _check_wrap_safe(topo: Topology, sched, phase: str,

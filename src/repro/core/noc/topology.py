@@ -8,6 +8,7 @@ nodes: 1-in/1-out passthrough routers, exactly like a spill register.
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -475,10 +476,28 @@ def build_occamy(n_groups: int = 6, clusters_per_group: int = 4, n_hbm: int = 8,
 TOPOLOGIES = ["mesh", "torus", "multi_die", "occamy"]
 
 
-def build_topology(name: str, **kw) -> Topology:
-    """Build a topology by name (the ``--topology`` axis of the sweeps)."""
+def topology_fields(name: str) -> tuple[str, ...]:
+    """Keyword arguments the named topology's builder accepts."""
     builders = {"mesh": build_mesh, "torus": build_torus,
                 "multi_die": build_multi_die, "occamy": build_occamy}
     if name not in builders:
         raise ValueError(f"unknown topology {name!r}; choose from {TOPOLOGIES}")
+    return tuple(inspect.signature(builders[name]).parameters)
+
+
+def build_topology(name: str, **kw) -> Topology:
+    """Build a topology by name (the ``--topology`` axis of the sweeps).
+
+    A keyword argument the named builder does not accept raises a
+    ``ValueError`` naming the offending field(s) and the valid fields for
+    that topology (rather than the raw ``TypeError`` of the bad call).
+    """
+    builders = {"mesh": build_mesh, "torus": build_torus,
+                "multi_die": build_multi_die, "occamy": build_occamy}
+    valid = topology_fields(name)  # also rejects unknown topology names
+    bad = sorted(set(kw) - set(valid))
+    if bad:
+        raise ValueError(
+            f"unknown field(s) {bad} for topology {name!r}; "
+            f"valid fields: {sorted(valid)}")
     return builders[name](**kw)
