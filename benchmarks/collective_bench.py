@@ -56,6 +56,54 @@ def _fabric_collectives(spec: FabricSpec, n_cycles: int, configs) -> list[dict]:
     return rows
 
 
+def _offload_rows() -> list[dict]:
+    """Tracked speedup rows for the in-fabric collective offload.
+
+    Software lowerings vs ``collective_offload=True`` on the 4x4 mesh:
+    serial-unicast multicast vs the routers' fork trees, and the DDP
+    gradient all-reduce (software ring) vs the in-fabric reduction at a
+    latency-bound bucket size (1 kB x 4 streams — small buckets are
+    where the offload wins; at bandwidth-bound payloads the ring's
+    1/N-chunk pipelining takes over, which ``ml_traffic`` prices when
+    picking per phase). The paper reports ~2x step-cycle wins for
+    offloaded collectives; the rows pin the measured ratios and the
+    analytical twins (<=10%).
+    """
+    topo = preset("mesh").build_topology()
+    params_sw = preset("mesh").params()
+    params_off = preset("mesh", collective_offload=True).params()
+
+    def _run(sc, params):
+        est = CT.analytical_cycles(sc, params, topo)
+        sim = S.build_sim(topo, params, CT.to_workload(topo, sc),
+                          groups=sc.meta.get("groups"))
+        out = S.stats(sim, S.run(sim, int(est * 1.5) + 500))
+        meas = CT.measured_cycles(out, topo)
+        ok = bool(np.array_equal(out["rx_bursts"], sc.expect_rx))
+        return meas, est, ok
+
+    rows = []
+    m_sw, _, _ = _run(CT.multicast(topo, data_kb=4), params_sw)
+    m_off, est, ok = _run(CT.multicast(topo, data_kb=4, offload=True),
+                          params_off)
+    rows.append(row("coll/offload/mesh/multicast_tree_cycles", 0.0, m_off,
+                    target=round(est, 1), rel_tol=0.10))
+    rows.append(row("coll/offload/mesh/multicast_tree_delivered", 0.0,
+                    int(ok), target=1, rel_tol=0.01))
+    rows.append(row("coll/offload/multicast_speedup_x", 0.0,
+                    round(m_sw / m_off, 2), target=8.0, cmp="ge"))
+    m_ring, _, _ = _run(CT.all_reduce(topo, data_kb=1, streams=4), params_sw)
+    m_in, est, ok = _run(CT.all_reduce(topo, data_kb=1, streams=4,
+                                       algo="infabric"), params_off)
+    rows.append(row("coll/offload/mesh/allreduce_infabric_cycles", 0.0, m_in,
+                    target=round(est, 1), rel_tol=0.10))
+    rows.append(row("coll/offload/mesh/allreduce_infabric_delivered", 0.0,
+                    int(ok), target=1, rel_tol=0.01))
+    rows.append(row("coll/offload/ddp_allreduce_speedup_x", 0.0,
+                    round(m_ring / m_in, 2), target=1.8, cmp="ge"))
+    return rows
+
+
 def ml_workload_rows(workload: str, smoke: bool = False,
                      topology: str = "mesh", algo: str = "auto") -> list[dict]:
     """Measured-vs-model rows for one compiled ML workload phase.
@@ -117,6 +165,7 @@ def bench(full: bool = False, smoke: bool = False) -> list[dict]:
             n_cycles=600, configs=[("all-gather", dict(data_kb=1))])
         # the compiled ML workloads run in their own bench-smoke CI step
         # (collective_bench --workload moe --smoke) to keep this path lean
+        rows += _offload_rows()  # tracked offload speedups (cheap: 4x4 mesh)
         return rows
     rows = []
     # ---- collectives on the cycle-level fabric vs calibrated model ----
@@ -195,6 +244,8 @@ def bench(full: bool = False, smoke: bool = False) -> list[dict]:
                        pods=2, compress_pod=False, compute_s=1.0)
     rows.append(row("coll/sched_pod_cost_dominates_uncompressed", 0.0,
                     int(c_raw.pod_s > c_raw.intra_s), target=1, rel_tol=0.01))
+    # ---- in-fabric collective offload vs software lowerings ----
+    rows += _offload_rows()
     # ---- ML-parallelism workloads (model config -> fabric traffic) ----
     for w in ML.WORKLOADS:
         rows += ml_workload_rows(w)

@@ -426,6 +426,44 @@ class FabricCollectiveModel:
                        + (streams - 1) * beats + fill)
         return best
 
+    def tree_multicast_cycles(self, beats: int, hops_list,
+                              streams: int = 1) -> float:
+        """Offloaded (in-fabric tree) multicast: the root injects each
+        stream's chunk ONCE and the routers fork it at the tree's fan-outs,
+        so completion is the root's serializer drain (``streams * beats``,
+        posted — no B-response round trips) plus the link latency to the
+        *deepest* member; ``hops_list`` are the root -> member router
+        traversal counts."""
+        if not list(hops_list):
+            return 0.0
+        return (streams * beats + self.hop_cycles * max(hops_list)
+                + self.issue_cycles)
+
+    def infabric_all_reduce_cycles(self, beats: int, red_hops, mc_hops,
+                                   streams: int = 1) -> float:
+        """Offloaded all-reduce: contributors push partial-sum bursts up the
+        reduction tree, each router's ALU slot combining per beat and
+        forwarding store-and-forward (a combined beat is emitted only after
+        every child contributed it, then the *next* beat's contributions
+        pop — a 2-cycle-per-beat pace at the merge points, matching the
+        2-stage router); the root then tree-multicasts the combined chunk,
+        gated on the reduction burst's arrival. ``red_hops`` are the
+        contributor -> root traversal counts, ``mc_hops`` the root ->
+        member counts. Streams drain in a fixed global order (see
+        ``sim._generators``), so the reduce phases serialize at the 2-cycle
+        beat pace while each completed stream's result multicast overlaps
+        the NEXT stream's reduction — only the LAST stream's multicast tail
+        (one chunk + the deepest member's link latency) adds completion
+        time. The additive constant is the injection + ejection +
+        slowest-child alignment overhead, calibrated against the cycle
+        simulator (tests/test_noc_offload.py pins the <=10% agreement)."""
+        if not list(red_hops):
+            return 0.0
+        reduce = (2.0 * streams * beats
+                  + self.hop_cycles * max(red_hops) + 4.0)
+        tail = beats + self.hop_cycles * max(mc_hops) + self.issue_cycles
+        return reduce + tail
+
     def serial_unicast_cycles(self, beats: int, hop_lists) -> float:
         """Software multicast: one root pushes a chunk to each destination,
         destinations split over the per-stream ``hop_lists``.

@@ -213,10 +213,59 @@ def reduce_scatter(topo: Topology, *, data_kb: float = 16, streams: int = 1,
 
 
 def all_reduce(topo: Topology, *, data_kb: float = 16, streams: int = 1,
-               order: np.ndarray | None = None) -> CollectiveSchedule:
+               order: np.ndarray | None = None,
+               algo: str = "ring") -> CollectiveSchedule:
     """Ring all-reduce = reduce-scatter + all-gather: 2(N-1) steps of
-    data/N-sized chunks."""
+    data/N-sized chunks.
+
+    ``algo="infabric"`` offloads the reduction to the fabric instead
+    (requires ``NocParams(collective_offload=True)``): every participant
+    pushes its full chunk ONE hop-tree up to the root — router ALU slots
+    combine the partial sums per beat in flight — and the root then
+    tree-multicasts the combined chunk, gated on the reduction burst's
+    arrival. Two posted bursts per stream total, versus the ring's
+    2(N-1) gated round trips. The group rides in ``meta["groups"]``; pass
+    it to ``sim.build_sim(..., groups=...)``.
+    """
     n = _ring_n(topo, order)
+    if algo == "infabric":
+        E = topo.n_endpoints
+        order = ring_order(topo) if order is None else np.asarray(order, np.int32)
+        root = int(order[0])
+        members = [int(t) for t in order]
+        contribs = [t for t in members if t != root]
+        beats = _beats_of(data_kb, streams)
+        dst, gate, bts = _empty(E, streams, 1)
+        txns = np.zeros((E, streams), np.int32)
+        expect = np.zeros((E, streams), np.int32)
+        # one group PER STREAM over the same tree: the router ALU keeps one
+        # accumulator slot per group, so distinct streams' partial sums
+        # must not share one (their beats would interleave and the tail
+        # flags misalign). Stream s contributes to reduction address
+        # E + G + s and the root multicasts its result to group s, gated
+        # on that stream's combined burst arriving.
+        for s in range(streams):
+            dst[contribs, s, 0] = E + streams + s
+            dst[root, s, 0] = E + s
+        bts[contribs, :, 0] = beats
+        txns[contribs, :] = 1
+        gate[root, :, 0] = 1
+        bts[root, :, 0] = beats
+        txns[root, :] = 1
+        expect[root, :] = 1       # the combined reduction burst
+        expect[contribs, :] = 1   # the multicast result
+        return CollectiveSchedule(
+            name="all-reduce", dst_seq=dst, gate=gate, beats_seq=bts,
+            txns=txns, expect_rx=expect, phases=(),
+            model="infabric-allreduce",
+            meta={"root": root, "beats": beats,
+                  "red_hops": [topo.hops(t, root) for t in contribs],
+                  "mc_hops": [topo.hops(root, t) for t in contribs],
+                  "groups": [{"root": root, "members": members,
+                              "reduce": contribs} for _ in range(streams)]},
+        )
+    if algo != "ring":
+        raise ValueError(f"all_reduce: unknown algo {algo!r}")
     beats = _beats_of(data_kb, n * streams)
     return _ring_schedule(topo, "all-reduce", 2 * (n - 1), beats, streams, order)
 
@@ -272,14 +321,39 @@ def all_reduce_2d(topo: Topology, *, data_kb: float = 16,
 
 
 def multicast(topo: Topology, root: int = 0, *, data_kb: float = 4,
-              streams: int = 1) -> CollectiveSchedule:
+              streams: int = 1, offload: bool = False) -> CollectiveSchedule:
     """Software multicast: the root unicasts one chunk to every other tile,
     destinations round-robined over the DMA streams. With one stream the
     RoB-less NI serializes full round trips (TxnID retargeting); multiple
     streams pipeline — the paper's multi-stream argument at collective
-    level."""
+    level.
+
+    ``offload=True`` lowers to the in-fabric tree multicast instead
+    (requires ``NocParams(collective_offload=True)``): the root injects each
+    stream's chunk ONCE, addressed to the collective group, and the routers
+    replicate it at the tree's fan-out ports — no per-destination unicasts
+    and no B-response round trips (posted). The group definition rides in
+    ``meta["groups"]``; pass it to ``sim.build_sim(..., groups=...)``.
+    """
     E = topo.n_endpoints
     nt = topo.meta["n_tiles"]
+    if offload:
+        beats = _beats_of(data_kb, streams)
+        dsts = [t for t in range(nt) if t != root]
+        dst, gate, bts = _empty(E, streams, 1)
+        txns = np.zeros((E, streams), np.int32)
+        expect = np.zeros((E, streams), np.int32)
+        dst[root, :, 0] = E  # group 0's multicast address
+        bts[root, :, 0] = beats
+        txns[root, :] = 1
+        expect[dsts, :] = 1  # every member hears each stream's chunk once
+        hops = [topo.hops(root, d) for d in dsts]
+        return CollectiveSchedule(
+            name="multicast", dst_seq=dst, gate=gate, beats_seq=bts,
+            txns=txns, expect_rx=expect, phases=(), model="mc-tree",
+            meta={"root": root, "beats": beats, "mc_hops": hops,
+                  "groups": [{"root": root, "members": list(range(nt))}]},
+        )
     beats = _beats_of(data_kb, 1)
     dsts = [t for t in range(nt) if t != root]
     K = int(np.ceil(len(dsts) / streams))
@@ -563,6 +637,8 @@ def _sched_links(topo: Topology, port_ep: np.ndarray,
              for e, s, k in zip(es, ss, ks)}
     links: set = set()
     for src, dst in pairs:
+        if dst >= topo.n_endpoints:
+            continue  # group-addressed (offloaded) step: no unicast route
         links.update(_route_links(topo, port_ep, src, dst))
     return links
 
@@ -593,6 +669,26 @@ def merge_disjoint(topo: Topology, scheds: list) -> CollectiveSchedule:
     allc = np.concatenate(active)
     assert len(np.unique(allc)) == len(allc), \
         "merge_disjoint: endpoint groups must be disjoint"
+    E = topo.n_endpoints
+    group_lists = [list(s.meta.get("groups", ())) for s in scheds]
+    G_total = sum(len(g) for g in group_lists)
+    if G_total:
+        # group-addressed steps encode the schedule-LOCAL group count in
+        # the address split ([E, E+G) = multicast, [E+G, E+2G) = reduction
+        # contribution): renumber each member's addresses into the merged
+        # group table before overlaying the dst sequences
+        base = 0
+        renum = []
+        for s, gl in zip(scheds, group_lists):
+            gi = len(gl)
+            d = s.dst_seq
+            is_mc = (d >= E) & (d < E + gi)
+            is_red = d >= E + gi
+            d2 = np.where(is_mc, d + base,
+                          np.where(is_red, d - gi + G_total + base, d))
+            renum.append(dataclasses.replace(s, dst_seq=d2.astype(np.int32)))
+            base += gi
+        scheds = renum
     dst = np.full_like(ref.dst_seq, -1)
     gate = np.zeros_like(ref.gate)
     bts = np.zeros_like(ref.beats_seq)
@@ -618,10 +714,13 @@ def merge_disjoint(topo: Topology, scheds: list) -> CollectiveSchedule:
                      "occupancy": float(max((load[ln] for ln in ls),
                                             default=1))})
         for s, ls in zip(scheds, link_sets))
+    meta = {"group_scheds": priced}
+    if G_total:
+        meta["groups"] = [g for gl in group_lists for g in gl]
     return CollectiveSchedule(
         name=ref.name, dst_seq=dst, gate=gate, beats_seq=bts, txns=txns,
         expect_rx=expect, phases=(), model=ref.model,
-        meta={"group_scheds": priced},
+        meta=meta,
     )
 
 
@@ -653,6 +752,7 @@ def to_workload(topo: Topology, sched: CollectiveSchedule) -> Workload:
         dma_beats=int(sched.beats_seq.max()),
         dma_dst_seq=sched.dst_seq, dma_gate=sched.gate,
         dma_beats_seq=sched.beats_seq,
+        n_groups=len(sched.meta.get("groups", ())),
     )
 
 
@@ -660,8 +760,17 @@ def check_schedule(sched: CollectiveSchedule) -> None:
     """Deadlock-freedom + exactly-once delivery at schedule level: replay
     the gates (a transfer fires once its stream has received its gate count)
     and verify every scheduled transfer eventually fires and every
-    (endpoint, stream) receives exactly expect_rx bursts."""
+    (endpoint, stream) receives exactly expect_rx bursts.
+
+    Offloaded (group-addressed) steps replay the fabric's collective
+    semantics: a multicast to ``E + g`` delivers one burst to every group
+    member but the sender, and a reduction contribution to ``E + G + g``
+    delivers ONE combined burst to the group's root once every contributor
+    has sent (the in-fabric ALU merges the partials)."""
     E, S, _ = sched.dst_seq.shape
+    groups = list(sched.meta.get("groups", ()))
+    G = len(groups)
+    contrib = np.zeros((G, S), np.int64)
     rx = np.zeros((E, S), np.int64)
     k = np.zeros((E, S), np.int64)
     fired = 0
@@ -676,7 +785,17 @@ def check_schedule(sched: CollectiveSchedule) -> None:
                         break
                     d = int(sched.dst_seq[e, s, step])
                     assert d >= 0, f"scheduled step {step} at ({e},{s}) has no dst"
-                    rx[d, s] += 1
+                    if d >= E + G:  # reduction contribution to group d-E-G
+                        g = d - E - G
+                        contrib[g, s] += 1
+                        if contrib[g, s] == len(groups[g]["reduce"]):
+                            rx[groups[g]["root"], s] += 1
+                    elif d >= E:  # multicast to group d-E
+                        for m in groups[d - E]["members"]:
+                            if m != e:
+                                rx[m, s] += 1
+                    else:
+                        rx[d, s] += 1
                     k[e, s] += 1
                     fired += 1
                     progress = True
@@ -708,6 +827,13 @@ def analytical_cycles(sched: CollectiveSchedule, params: NocParams,
     if sched.model == "serial-unicast":
         return model.serial_unicast_cycles(sched.meta["beats"],
                                            sched.meta["hop_lists"])
+    if sched.model == "mc-tree":
+        return model.tree_multicast_cycles(sched.meta["beats"],
+                                           sched.meta["mc_hops"], streams=S)
+    if sched.model == "infabric-allreduce":
+        return model.infabric_all_reduce_cycles(
+            sched.meta["beats"], sched.meta["red_hops"],
+            sched.meta["mc_hops"], streams=S)
     if sched.model == "a2a-rotation":
         return model.rotation_all_to_all_cycles(
             sched.meta["beats"], sched.meta["hop_mat"],

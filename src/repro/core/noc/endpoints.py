@@ -57,6 +57,13 @@ class Workload:
     dma_dst_seq: np.ndarray | None = None  # [E, S, K] int32
     dma_gate: np.ndarray | None = None  # [E, S, K] int32 required rx_bursts
     dma_beats_seq: np.ndarray | None = None  # [E, S, K] int32
+    # ---- in-fabric collective offload (params.collective_offload) ----
+    # Number of collective groups addressable by this workload. DMA
+    # destinations in [E, E+n_groups) are offloaded multicasts to group g;
+    # [E+n_groups, E+2*n_groups) are reduction contributions to group g.
+    # Both are posted writes (no NI/RoB tracking). The fabric must be built
+    # with matching groups (see sim.build_sim).
+    n_groups: int = 0
 
     @property
     def n_streams(self) -> int:

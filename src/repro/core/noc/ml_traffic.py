@@ -231,9 +231,20 @@ def required_vcs(topo: Topology, sched) -> int:
     """
     if not topo.meta.get("wrap"):
         return 1
+    E = topo.n_endpoints
+    groups = list(sched.meta.get("groups", ()))
+    G = len(groups)
     es, ss, ks = np.nonzero(sched.dst_seq >= 0)
-    pairs = {(int(e), int(sched.dst_seq[e, s, k]))
-             for e, s, k in zip(es, ss, ks)}
+    pairs = set()
+    for e, s, k in zip(es, ss, ks):
+        d = int(sched.dst_seq[e, s, k])
+        if d >= E + G:  # reduction contribution: store-and-forward to root
+            pairs.add((int(e), int(groups[d - E - G]["root"])))
+        elif d >= E:  # multicast: the fork tree rides the unicast routes
+            pairs.update((int(e), int(m)) for m in groups[d - E]["members"]
+                         if int(m) != int(e))
+        else:
+            pairs.add((int(e), d))
     return required_vcs_for_pairs(topo, pairs)
 
 
@@ -258,7 +269,8 @@ def _check_wrap_safe(topo: Topology, sched, phase: str,
 def compile_traffic(cfg, par: ParallelismSpec, topo: Topology, *,
                     tokens_per_device: int = 1024,
                     sim_cap_kb: float = 32.0,
-                    workloads=None, n_vcs: int = 1) -> list[TrafficPhase]:
+                    workloads=None, n_vcs: int = 1,
+                    params=None) -> list[TrafficPhase]:
     """Compile one training step's communication onto ``topo``.
 
     ``cfg`` is a ``repro.configs.ModelConfig`` (any registered arch);
@@ -268,6 +280,15 @@ def compile_traffic(cfg, par: ParallelismSpec, topo: Topology, *,
     more devices than ``topo`` has tiles, or if a phase's routes need
     more virtual channels than ``n_vcs`` (match ``NocParams.n_vcs`` of
     the simulated fabric; ``required_vcs`` computes the threshold).
+
+    Pass ``params`` (a ``NocParams`` with ``collective_offload=True``)
+    to let the compiler pick software vs in-fabric lowering per phase:
+    the ddp gradient all-reduce is priced both as the software ring and
+    as the router-offloaded in-fabric reduction (``algo="infabric"``)
+    and the analytically cheaper one wins — in-fabric wins the
+    latency-bound regime (small buckets), the ring wins bandwidth-bound
+    payloads where its 1/N-chunk pipelining beats the tree's
+    store-and-forward ALU. The pick is recorded in the phase ``note``.
     """
     n_tiles = topo.meta["n_tiles"]
     if par.n_devices > n_tiles:
@@ -299,11 +320,25 @@ def compile_traffic(cfg, par: ParallelismSpec, topo: Topology, *,
         n_buckets = max(int(np.ceil(kb / par.bucket_kb)), 1)
         streams = min(n_buckets, par.max_streams)
         full, sim = _merged(CT.all_reduce, dp_groups, kb, streams=streams)
+        pattern = "all-reduce"
+        note = (f"{n_buckets} gradient buckets over {streams} DMA streams, "
+                f"{len(dp_groups)} ring(s) of {par.dp}")
+        if params is not None and getattr(params, "collective_offload",
+                                          False):
+            off_full, off_sim = _merged(CT.all_reduce, dp_groups, kb,
+                                        streams=streams, algo="infabric")
+            ring_c = CT.analytical_cycles(full, params, topo)
+            off_c = CT.analytical_cycles(off_full, params, topo)
+            if off_c < ring_c:
+                full, sim, pattern = off_full, off_sim, "all-reduce-infabric"
+                note += (f"; in-fabric reduction offload picked "
+                         f"({off_c:.0f} vs ring {ring_c:.0f} model cycles)")
+            else:
+                note += (f"; software ring kept ({ring_c:.0f} vs in-fabric "
+                         f"{off_c:.0f} model cycles)")
         phases.append(TrafficPhase(
-            name="ddp", pattern="all-reduce", schedule=full,
-            sim_schedule=sim, count=1, data_kb=kb,
-            note=f"{n_buckets} gradient buckets over {streams} DMA streams, "
-                 f"{len(dp_groups)} ring(s) of {par.dp}"))
+            name="ddp", pattern=pattern, schedule=full,
+            sim_schedule=sim, count=1, data_kb=kb, note=note))
     if "tp" in want and par.tp > 1:
         kb = _act_kb(cfg, par, tokens_per_device)
         full, sim = _merged(CT.all_gather, tp_groups, kb,
@@ -381,7 +416,8 @@ def validate_phase(topo: Topology, phase: TrafficPhase, params) -> dict:
 
     sched = phase.sim_schedule
     est = CT.analytical_cycles(sched, params, topo)
-    sim = S.build_sim(topo, params, CT.to_workload(topo, sched))
+    sim = S.build_sim(topo, params, CT.to_workload(topo, sched),
+                      groups=sched.meta.get("groups"))
     out = S.stats(sim, S.run(sim, int(est * 1.5) + 500))
     return {
         "measured": CT.measured_cycles(out, topo),

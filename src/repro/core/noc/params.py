@@ -84,6 +84,17 @@ class NocParams:
     # endpoint interaction to super-step boundaries (see core/noc/README).
     fused_cycles: int = 1
 
+    # in-network collective offload (Colagrande et al. sequel paper):
+    # routers fork WIDE_MC flits along a per-group multicast tree
+    # (credit-checked on every branch before the single pop) and combine
+    # WIDE_RED partial sums in a per-(router, group) ALU slot before
+    # forwarding one flit toward the root. False (default) is bit-identical
+    # to the historical fabric — the offload tables/state are never
+    # materialized and the pinned router traces carry no extra operands.
+    # Requires fused_cycles == 1 (offload state is not threaded through the
+    # fused multi-cycle kernels); enforced at build_sim time.
+    collective_offload: bool = False
+
     def __post_init__(self):
         """Validate the channel count, backend name, and stepping knobs."""
         if self.n_channels < 3:
@@ -100,6 +111,9 @@ class NocParams:
             raise ValueError("fused_cycles must be >= 1")
         if self.n_vcs < 1:
             raise ValueError("n_vcs must be >= 1")
+        if self.collective_offload and self.fused_cycles != 1:
+            raise ValueError(
+                "collective_offload requires fused_cycles == 1")
 
 
 # flit kinds
@@ -109,6 +123,8 @@ WIDE_AR = 2  # wide read request (rides the narrow `req` link)
 WIDE_R = 3  # wide read data beat (wide link)
 WIDE_AW_W = 4  # wide write addr+data beats (wide link, wormhole)
 WIDE_B = 5  # write response (rsp link)
+WIDE_MC = 6  # multicast write beat (wide link; forked at tree fan-outs)
+WIDE_RED = 7  # reduction partial-sum beat (wide link; combined per hop)
 
 # physical channel roles (channel indices >= CH_WIDE are all wide channels;
 # the channel *count* lives in NocParams.n_channels)
@@ -124,6 +140,8 @@ KIND_CHANNEL = {
     WIDE_R: CH_WIDE,
     WIDE_AW_W: CH_WIDE,
     WIDE_B: CH_RSP,
+    WIDE_MC: CH_WIDE,
+    WIDE_RED: CH_WIDE,
 }
 
 

@@ -36,7 +36,9 @@ from repro.core.noc.params import (
     WIDE_AR,
     WIDE_AW_W,
     WIDE_B,
+    WIDE_MC,
     WIDE_R,
+    WIDE_RED,
     NocParams,
     wide_channel_of,
 )
@@ -106,8 +108,19 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
                                              flits[..., F_META], params)
     # write bursts arriving (we are the target); wormhole => no interleave
     is_w = valid & (kind == WIDE_AW_W)
-    beats_rcvd = st.beats_rcvd + (is_r | is_w).sum(axis=0)
-    any_beat = (is_r | is_w).any(axis=0)
+    if params.collective_offload:
+        # in-fabric collective payloads (tree-forked multicast beats and
+        # combined reduction partials) are posted writes: they count as
+        # received beats / complete bursts but neither enqueue a memory
+        # response nor touch the issuer-side NI (nothing to retire). The
+        # branch is static, so offload=False traces stay bit-identical.
+        is_off = valid & ((kind == WIDE_MC) | (kind == WIDE_RED))
+        rcvd = is_r | is_w | is_off
+        off_tail = is_off & (flits[..., F_LAST] > 0)
+    else:
+        rcvd = is_r | is_w
+    beats_rcvd = st.beats_rcvd + rcvd.sum(axis=0)
+    any_beat = rcvd.any(axis=0)
     cyc_e = jnp.broadcast_to(cycle, (E,)).astype(jnp.int32)
     last_rx = jnp.where(any_beat, cyc_e, st.last_rx)
     first_rx = jnp.where(any_beat & (st.first_rx < 0), cyc_e, st.first_rx)
@@ -126,8 +139,12 @@ def _ingest(st: epm.EndpointState, flits, valid, cycle, params: NocParams, wl):
                                         1, WIDE_B, flits[..., F_TS],
                                         flits[..., F_META], circular=circ)
     # completed write bursts per stream: the data-dependency signal the
-    # scheduled (collective) DMA gates on
-    rx_bursts = epm._col_add(st.rx_bursts, stream, w_tail.astype(jnp.int32),
+    # scheduled (collective) DMA gates on. Offloaded collective tails count
+    # too (a root gates its multicast on the in-fabric reduction arriving).
+    burst_tail = w_tail
+    if params.collective_offload:
+        burst_tail = w_tail | off_tail
+    rx_bursts = epm._col_add(st.rx_bursts, stream, burst_tail.astype(jnp.int32),
                              circ)
 
     # ---- rsp channel ----
@@ -249,11 +266,27 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
         enabled = dma_dst_t != -1
     st_tmp = dataclasses.replace(st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob)
     ok_es = epm._ni_check(st_tmp, txn_of_stream, dst_es, params, beats)
+    n_off = wl.n_groups
+    if n_off:
+        # group-addressed transfers (dst >= E: offloaded multicast in
+        # [E, E+G), reduction contributions in [E+G, E+2G)) are posted
+        # writes — no response returns, so they bypass the NI/RoB check
+        ok_es = ok_es | (dst_es >= E)
     want_es = (st.d_txns_left > 0) & (st.d_outst < params.max_outstanding) & enabled & gate_ok
     elig = want_es & ok_es
-    # rotating pick
+    # rotating pick — except under collective offload, where the pick is a
+    # static lowest-stream-first priority: in-fabric reduction consumes the
+    # streams' bursts beat-aligned per group, so contributors must drain
+    # their streams in one globally consistent order or the per-beat child
+    # alignment and the shared write serializer close a circular wait
+    # (endpoint A's stream-1 burst backpressured behind a reduction waiting
+    # on endpoint B's stream-1, which B cannot start before its stream-0
+    # burst drains through a tree waiting on A's stream-0)
     rot = (jnp.arange(S)[None, :] - (cycle + eidx[:, None])) % S
-    score = jnp.where(elig, rot, S + 1)
+    if n_off:
+        score = jnp.where(elig, jnp.arange(S)[None, :], S + 1)
+    else:
+        score = jnp.where(elig, rot, S + 1)
     pick = jnp.argmin(score, axis=1)
     any_pick = jnp.take_along_axis(score, pick[:, None], axis=1)[:, 0] <= S
     stall_d = jnp.any(want_es & ~ok_es, axis=1) & ~any_pick
@@ -283,12 +316,21 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
         w_txn = jnp.where(fire_d, pick_txn, st.w_txn)
         w_ts = jnp.where(fire_d, jnp.broadcast_to(cycle, (E,)).astype(jnp.int32), st.w_ts)
 
+    d_done = st.d_done
+    if n_off:
+        # posted group-addressed transfers hold no NI slot and are never
+        # outstanding (nothing retires them); they count done at issue
+        pick_off = fire_d & (pick_dst >= E)
+        fire_ni = fire_d & ~pick_off
+        d_done = epm._col_add(d_done, pick, pick_off.astype(jnp.int32), circ)
+    else:
+        fire_ni = fire_d
     ni_cnt, ni_dst, rob = epm._ni_issue(
         dataclasses.replace(st, ni_cnt=ni_cnt, ni_dst=ni_dst, rob_credit=rob),
-        fire_d, pick_txn, pick_dst, pick_beats, params)
+        fire_ni, pick_txn, pick_dst, pick_beats, params)
     d_txns_left = epm._col_add(st.d_txns_left, pick,
                                -fire_d.astype(jnp.int32), circ)
-    d_outst = epm._col_add(st.d_outst, pick, fire_d.astype(jnp.int32), circ)
+    d_outst = epm._col_add(st.d_outst, pick, fire_ni.astype(jnp.int32), circ)
     d_seq = epm._col_add(st.d_seq, pick, fire_d.astype(jnp.int32), circ)
 
     # ---- write burst serializer: one AW_W beat per cycle ----
@@ -307,7 +349,18 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
         last = jnp.where(emit, (w_left == 1).astype(jnp.int32), 0)
         # META carries the burst's TOTAL beats so the target can echo it in
         # the B response (exact retirement credit at the issuer)
-        flit_w = eng.pack_flit(w_dst, eidx, WIDE_AW_W, w_txn, last, w_ts, w_beats)
+        if n_off:
+            # decode the group-address range at emission: reduction
+            # contributions rewrite dst to the group address [E, E+G) the
+            # in-fabric ALU emits toward the root; multicast beats keep it
+            is_red_w = w_dst >= E + n_off
+            kind_w = jnp.where(is_red_w, WIDE_RED,
+                               jnp.where(w_dst >= E, WIDE_MC, WIDE_AW_W))
+            flit_w = eng.pack_flit(jnp.where(is_red_w, w_dst - n_off, w_dst),
+                                   eidx, kind_w, w_txn, last, w_ts, w_beats)
+        else:
+            flit_w = eng.pack_flit(w_dst, eidx, WIDE_AW_W, w_txn, last, w_ts,
+                                   w_beats)
         eg, eg_ready, eg_cnt = epm._eg_push(
             eg, eg_ready, st.eg_head, eg_cnt, wch, emit, flit_w,
             jnp.broadcast_to(cycle + 1, (E,)).astype(jnp.int32),
@@ -321,7 +374,7 @@ def _generators(st: epm.EndpointState, cycle, params: NocParams, wl, n_tiles):
     return dataclasses.replace(
         st, eg=eg, eg_ready=eg_ready, eg_cnt=eg_cnt, ni_cnt=ni_cnt, ni_dst=ni_dst,
         rob_credit=rob, n_acc=n_acc, n_seq=n_seq, n_sent=n_sent,
-        d_txns_left=d_txns_left, d_outst=d_outst, d_seq=d_seq,
+        d_txns_left=d_txns_left, d_outst=d_outst, d_seq=d_seq, d_done=d_done,
         w_stream=w_stream, w_left=w_left, w_beats=w_beats, w_dst=w_dst,
         w_txn=w_txn, w_ts=w_ts, beats_sent=beats_sent, ni_stall=ni_stall,
     )
@@ -424,7 +477,8 @@ class Sim:
         wl = self.wl if wl is None else wl
         fabric = eng.init_fabric(self.topo, self.params.depth_in,
                                  self.params.depth_out, self.params.n_channels,
-                                 self.params.n_vcs)
+                                 self.params.n_vcs,
+                                 n_groups=self.tables.n_groups)
         eps = epm.init_endpoints(self.topo.n_endpoints, self.params, wl.n_streams)
         eps = dataclasses.replace(eps, d_txns_left=jnp.asarray(wl.dma_txns))
         return SimState(fabric=fabric, eps=eps, cycle=jnp.zeros((), jnp.int32))
@@ -649,9 +703,24 @@ def _trace_slice(st: SimState, deliver, fields: tuple):
     return out
 
 
-def build_sim(topo: Topology, params: NocParams, wl: epm.Workload) -> Sim:
-    """Assemble a Sim: fabric tables + HBM/memory maps for ``topo``."""
+def build_sim(topo: Topology, params: NocParams, wl: epm.Workload,
+              groups: list[dict] | None = None) -> Sim:
+    """Assemble a Sim: fabric tables + HBM/memory maps for ``topo``.
+
+    ``groups`` (requires ``params.collective_offload``) declares the
+    in-fabric collective groups — ``{"root": ep, "members": [...]}`` dicts,
+    optionally with ``"reduce": [...]`` contributors — whose multicast fork
+    and reduction trees are baked into the fabric tables; group ``g`` is
+    then addressed by workloads as destination ``E + g`` (multicast) or
+    ``E + G + g`` (reduction contribution).
+    """
     E = topo.n_endpoints
+    if groups is not None and not params.collective_offload:
+        raise ValueError("collective groups require NocParams(collective_offload=True)")
+    if wl.n_groups and (groups is None or len(groups) != wl.n_groups):
+        raise ValueError(
+            f"workload addresses {wl.n_groups} collective group(s) but the "
+            f"fabric was built with {0 if groups is None else len(groups)}")
     is_hbm = np.zeros((E,), bool)
     n_hbm = topo.meta.get("n_hbm", 0)
     if n_hbm:
@@ -659,7 +728,7 @@ def build_sim(topo: Topology, params: NocParams, wl: epm.Workload) -> Sim:
     is_mem = np.ones((E,), bool)  # every endpoint can serve (tiles: SPM)
     return Sim(
         topo=topo, params=params, wl=wl,
-        tables=eng.make_tables(topo, params.n_vcs),
+        tables=eng.make_tables(topo, params.n_vcs, groups=groups),
         is_hbm=jnp.asarray(is_hbm), is_mem=jnp.asarray(is_mem),
     )
 
@@ -710,7 +779,7 @@ def run_trace(sim: Sim, n_cycles: int, state: SimState | None = None,
     return s, trace
 
 
-def canonical_state(sim: Sim, st: SimState) -> SimState:
+def canonical_state(sim: Sim, st: SimState, scrub: bool = False) -> SimState:
     """SimState with implementation-defined garbage masked out.
 
     The fast and naive step paths are behaviorally identical but leave
@@ -720,6 +789,15 @@ def canonical_state(sim: Sim, st: SimState) -> SimState:
     and zeroes all dead queue/FIFO slots, so
     ``canonical_state(sim_fast, st_fast) == canonical_state(sim_naive,
     st_naive)`` leaf-for-leaf iff the simulations agree on all live state.
+
+    ``scrub=True`` additionally neutralizes the endpoint scratch registers
+    that retain their last burst after going idle (the memory server's
+    response template ``m_flit``, the write serializer's ``w_*`` registers,
+    and NI destination slots with zero outstanding count). Differential
+    harnesses should compare scrubbed states: without the scrub, two
+    behaviorally identical runs can compare unequal on a stale tail flit —
+    and the workaround of excluding those whole leaves from the comparison
+    would let real divergences in their *live* values pass by accident.
     """
     f, eps = st.fabric, st.eps
 
@@ -749,6 +827,19 @@ def canonical_state(sim: Sim, st: SimState) -> SimState:
     eps = dataclasses.replace(
         eps, mq=mq, mq_head=jnp.zeros_like(eps.mq_head),
         eg=eg, eg_ready=eg_ready, eg_head=jnp.zeros_like(eps.eg_head))
+    if scrub:
+        w_idle = eps.w_stream < 0
+        z = jnp.zeros_like(eps.w_left)
+        eps = dataclasses.replace(
+            eps,
+            m_flit=jnp.where(eps.m_active[:, None], eps.m_flit, 0),
+            w_left=jnp.where(w_idle, z, eps.w_left),
+            w_beats=jnp.where(w_idle, z, eps.w_beats),
+            w_dst=jnp.where(w_idle, z, eps.w_dst),
+            w_txn=jnp.where(w_idle, z, eps.w_txn),
+            w_ts=jnp.where(w_idle, z, eps.w_ts),
+            ni_dst=jnp.where(eps.ni_cnt == 0, -1, eps.ni_dst),
+        )
     return SimState(fabric=fabric, eps=eps, cycle=st.cycle)
 
 
@@ -775,7 +866,8 @@ def run_sweep(sim: Sim, wls: list[epm.Workload], n_cycles: int) -> list[SimState
     for w in wls:
         if (w.dma_write != ref.dma_write
                 or w.unique_txn_per_stream != ref.unique_txn_per_stream
-                or w.n_tiles != ref.n_tiles or w.n_streams != ref.n_streams):
+                or w.n_tiles != ref.n_tiles or w.n_streams != ref.n_streams
+                or w.n_groups != ref.n_groups):
             raise ValueError("sweep workloads must share static workload attributes")
         # the swept-field list is derived from the REFERENCE workload, so a
         # field the reference leaves unset would be silently dropped for the

@@ -127,6 +127,7 @@ class FabricSpec:
     step_impl: str = "fast"  # "fast" | "naive"
     router_tile: int = 8
     fused_cycles: int = 1
+    collective_offload: bool = False  # in-fabric multicast + reduction ALU
 
     # -- workload binding (optional) --
     workload: str | None = None  # traffic.PATTERNS or "all-to-all"
@@ -273,7 +274,8 @@ class FabricSpec:
             n_channels=self.n_channels, n_vcs=self.n_vcs,
             ni_order=self.ni_order, backend=self.backend,
             step_impl=self.step_impl, router_tile=self.router_tile,
-            fused_cycles=self.fused_cycles)
+            fused_cycles=self.fused_cycles,
+            collective_offload=self.collective_offload)
 
     def lower(self) -> tuple[Topology, NocParams]:
         """``(Topology, NocParams)`` — bit-identical to the hand-built zoo."""

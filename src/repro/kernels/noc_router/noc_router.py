@@ -52,7 +52,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.noc_router import ref
-from repro.kernels.noc_router.ref import NF
+from repro.kernels.noc_router.ref import NF, NRED
 
 
 def effective_tile(router_tile: int, n_routers: int) -> int:
@@ -117,6 +117,58 @@ def _arb_kernel_vc(in_buf_ref, in_cnt_ref, out_cnt_ref, rr_ref, wh_ref,
     in_space_ref[...] = arb.in_space[None]
 
 
+def _arb_kernel_offload(*refs, depth_out: int, n_endpoints: int, n_vcs: int,
+                        has_vc: bool):
+    """Collective-offload arbitration: fork table + reduction ALU.
+
+    Mirrors ``ref.offload_decisions`` for one (channel, K-router block)
+    program; the per-(router, group) reduction accumulator/contribution
+    state rides as two extra channel-batched operands and comes back as two
+    extra outputs. Separate from ``_arb_kernel``/``_arb_kernel_vc`` so the
+    default paths' traces — pinned bit-identical by the golden tests —
+    carry no extra operands. The apply kernel is shared unchanged: fork
+    copies and emitted reduction flits arrive through the merged
+    grant/chosen decisions.
+    """
+    if has_vc:
+        (in_buf_ref, in_cnt_ref, out_cnt_ref, rr_ref, wh_ref, route_ref,
+         vc_out_ref, fork_ref, rparent_ref, rneed_ref, racc_ref, rgot_ref,
+         arb_pop_ref, granted_ref, chosen_ref, rr_out_ref, wh_out_ref,
+         in_space_ref, racc_out_ref, rgot_out_ref) = refs
+        vc_out = vc_out_ref[...]
+    else:
+        (in_buf_ref, in_cnt_ref, out_cnt_ref, rr_ref, wh_ref, route_ref,
+         fork_ref, rparent_ref, rneed_ref, racc_ref, rgot_ref,
+         arb_pop_ref, granted_ref, chosen_ref, rr_out_ref, wh_out_ref,
+         in_space_ref, racc_out_ref, rgot_out_ref) = refs
+        vc_out = None
+    arb, racc2, rgot2 = ref.offload_decisions(
+        in_buf_ref[0],  # [K, P, Din, NF]
+        in_cnt_ref[0],  # [K, P]
+        out_cnt_ref[0],
+        rr_ref[0],
+        wh_ref[0],
+        route_ref[...],  # [K, E]
+        depth_out=depth_out,
+        fork_out=fork_ref[...],  # [K, NG, P]
+        red_parent=rparent_ref[...],  # [K, NG]
+        red_need=rneed_ref[...],  # [K, NG]
+        red_acc=racc_ref[0],  # [K, NG, NRED]
+        red_got=rgot_ref[0],  # [K, NG, P]
+        n_endpoints=n_endpoints,
+        vc_out=vc_out,
+        n_vcs=n_vcs,
+    )
+    arb_pop_ref[...] = arb.arb_pop[None]
+    granted_ref[...] = arb.granted[None]
+    chosen_ref[...] = arb.chosen[None]
+    rr_out_ref[...] = arb.rr_ptr[None]
+    wh_out_ref[...] = arb.wh_lock[None]
+    in_space_ref[...] = arb.in_space[None]
+    racc_out_ref[...] = racc2[None]
+    rgot_out_ref[...] = rgot2[None]
+
+
 def _apply_kernel(in_buf_ref, in_cnt_ref, out_buf_ref, out_cnt_ref,
                   arb_pop_ref, granted_ref, chosen_ref, in_space_ref,
                   out_heads_all_ref, out_valid_all_ref, in_space_all_ref,
@@ -158,7 +210,9 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                         route, link_src, link_dst, port_ep, ep_attach,
                         ep_space, *, router_tile: int = 1,
                         fused_fifo: bool = False, interpret: bool = False,
-                        vc_out=None, n_vcs: int = 1):
+                        vc_out=None, n_vcs: int = 1,
+                        fork_out=None, red_parent=None, red_need=None,
+                        red_acc=None, red_got=None, n_endpoints: int = 0):
     """One fabric cycle on the Pallas backend.
 
     State is channel-batched (``in_buf`` [C, R, P, Din, NF], counters
@@ -174,6 +228,14 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     endpoint deliveries ``(ep_flit [C, E, NF], ep_valid [C, E])`` —
     identical, bit for bit, to ``ref.router_cycle_reference`` vmapped over
     channels with the same ``fused`` flag.
+
+    With ``fork_out`` set (collective offload), arbitration runs the
+    ``_arb_kernel_offload`` variant: the multicast fork / reduction-tree
+    tables ride as extra block-sliced operands, the channel-batched
+    reduction state ``red_acc`` [C, R, NG, NRED] / ``red_got``
+    [C, R, NG, P] is consumed and re-emitted, and the return tuple extends
+    to ``(..., ep_flit, ep_valid, red_acc', red_got')`` — bit-identical to
+    ``ref.router_cycle_offload_reference`` vmapped over channels.
     """
     C, R, P = in_cnt.shape
     Din = in_buf.shape[-2]
@@ -191,16 +253,36 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     router_spec = lambda *tail: pl.BlockSpec(
         (K, *tail), lambda c, r: (r,) + (0,) * len(tail))
 
-    if n_vcs == 1:
+    offload = fork_out is not None
+    if offload:
+        NG = red_need.shape[-1]
+        arb_fn = functools.partial(_arb_kernel_offload, depth_out=Dout,
+                                   n_endpoints=n_endpoints, n_vcs=n_vcs,
+                                   has_vc=n_vcs > 1)
+        arb_tables = [route] + ([vc_out] if n_vcs > 1 else []) + [
+            fork_out, red_parent, red_need, red_acc, red_got]
+        arb_table_specs = (
+            [router_spec(E)]
+            + ([router_spec(P, Pp)] if n_vcs > 1 else [])
+            + [router_spec(NG, P), router_spec(NG), router_spec(NG),
+               state_spec(NG, NRED), state_spec(NG, P)])
+        extra_out_specs = [state_spec(NG, NRED), state_spec(NG, P)]
+        extra_out_shapes = [
+            jax.ShapeDtypeStruct((C, R, NG, NRED), i32),
+            jax.ShapeDtypeStruct((C, R, NG, P), jnp.bool_),
+        ]
+    elif n_vcs == 1:
         arb_fn = functools.partial(_arb_kernel, depth_out=Dout)
         arb_tables = [route]
         arb_table_specs = [router_spec(E)]
+        extra_out_specs, extra_out_shapes = [], []
     else:
         arb_fn = functools.partial(_arb_kernel_vc, depth_out=Dout,
                                    n_vcs=n_vcs)
         arb_tables = [route, vc_out]
         arb_table_specs = [router_spec(E), router_spec(P, Pp)]
-    arb_pop, granted, chosen, rr2, wh2, in_space = pl.pallas_call(
+        extra_out_specs, extra_out_shapes = [], []
+    arb_pop, granted, chosen, rr2, wh2, in_space, *red_new = pl.pallas_call(
         arb_fn,
         grid=(C, G),
         in_specs=[
@@ -209,7 +291,7 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
             state_spec(P),  # out_cnt
             state_spec(P),  # rr_ptr
             state_spec(P),  # wh_lock
-            *arb_table_specs,  # route (+ vc_out when V > 1)
+            *arb_table_specs,  # route (+ vc_out / offload tables + state)
         ],
         out_specs=[
             state_spec(P),  # arb_pop
@@ -218,6 +300,7 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
             state_spec(P),  # rr_ptr'
             state_spec(P),  # wh_lock'
             state_spec(P),  # in_space
+            *extra_out_specs,  # red_acc' / red_got' (offload only)
         ],
         out_shape=[
             jax.ShapeDtypeStruct((C, R, P), jnp.bool_),
@@ -226,6 +309,7 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
             jax.ShapeDtypeStruct((C, R, P), i32),
             jax.ShapeDtypeStruct((C, R, P), i32),
             jax.ShapeDtypeStruct((C, R, P), jnp.bool_),
+            *extra_out_shapes,
         ],
         interpret=interpret,
     )(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, *arb_tables)
@@ -274,6 +358,9 @@ def router_cycle_pallas(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     er, ep_p = ep_attach[:, 0], ep_attach[:, 1]
     ep_flit = out_heads[:, er, ep_p]  # [C, E, NF]
     ep_valid = out_valid[:, er, ep_p] & ep_space
+    if offload:
+        return (in2, in_cnt2, out2, out_cnt2, rr2, wh2, ep_flit, ep_valid,
+                red_new[0], red_new[1])
     return in2, in_cnt2, out2, out_cnt2, rr2, wh2, ep_flit, ep_valid
 
 

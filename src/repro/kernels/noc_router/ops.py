@@ -36,6 +36,7 @@ from repro.kernels.noc_router.noc_router import (
     router_cycles_fused_pallas,
 )
 from repro.kernels.noc_router.ref import (
+    router_cycle_offload_reference,
     router_cycle_reference,
     router_cycles_scan,
 )
@@ -62,7 +63,9 @@ def router_cycle(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                  route, link_src, link_dst, port_ep, ep_attach, ep_space,
                  *, backend: str = "jnp", interpret=None,
                  router_tile: int = 1, fused_fifo: bool = False,
-                 vc_out=None, n_vcs: int = 1):
+                 vc_out=None, n_vcs: int = 1,
+                 fork_out=None, red_parent=None, red_need=None,
+                 red_acc=None, red_got=None, n_endpoints: int = 0):
     """One cycle of every channel at once on the selected backend.
 
     State arrays are channel-batched ([C, R, P, ...]); tables are shared
@@ -72,8 +75,24 @@ def router_cycle(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     virtual-channel datapath (state P axis = physical ports * n_vcs,
     ``vc_out`` [R, P, P_phys] the dateline VC-switch table shared across
     channels); the default leaves every historical call bit-identical.
+
+    Passing ``fork_out`` (with the other collective-offload tables and the
+    channel-batched reduction state ``red_acc`` [C, R, G, NRED] /
+    ``red_got`` [C, R, G, P]) selects the offload datapath on both
+    backends and extends the return tuple to ``(..., red_acc', red_got')``.
     """
+    offload = fork_out is not None
     if backend == "jnp":
+        if offload:
+            fn = jax.vmap(
+                functools.partial(router_cycle_offload_reference,
+                                  n_endpoints=n_endpoints, fused=fused_fifo,
+                                  vc_out=vc_out, n_vcs=n_vcs),
+                in_axes=(0,) * 8 + (None,) * 8 + (0,),
+            )
+            return fn(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
+                      red_acc, red_got, route, link_src, link_dst, port_ep,
+                      ep_attach, fork_out, red_parent, red_need, ep_space)
         if n_vcs > 1:
             fn = jax.vmap(
                 functools.partial(router_cycle_reference, fused=fused_fifo,
@@ -91,7 +110,10 @@ def router_cycle(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
                                    router_tile=router_tile,
                                    fused_fifo=fused_fifo,
                                    interpret=_interp(interpret),
-                                   vc_out=vc_out, n_vcs=n_vcs)
+                                   vc_out=vc_out, n_vcs=n_vcs,
+                                   fork_out=fork_out, red_parent=red_parent,
+                                   red_need=red_need, red_acc=red_acc,
+                                   red_got=red_got, n_endpoints=n_endpoints)
     raise ValueError(f"unknown router backend {backend!r}; expected one of {BACKENDS}")
 
 

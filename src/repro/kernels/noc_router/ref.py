@@ -35,6 +35,21 @@ FLIT_FIELDS = ("dst", "src", "kind", "txn", "last", "ts", "meta")
 NF = len(FLIT_FIELDS)
 F_DST, F_SRC, F_KIND, F_TXN, F_LAST, F_TS, F_META = range(NF)
 
+# collective-offload flit kinds (must match repro.core.noc.params.WIDE_MC /
+# WIDE_RED; the kernel package deliberately does not import core.noc, so the
+# pairing is pinned by tests/test_noc_offload.py). MC/RED flits are
+# group-addressed: F_DST = n_endpoints + group id.
+KIND_MC = 6
+KIND_RED = 7
+
+# per-(router, group) reduction-ALU accumulator layout: trailing axis of
+# NRED int32 fields. "nlast" accumulates max(1 - F_LAST) so the all-zero
+# reset state emits last=1 single-beat semantics by default and clearing an
+# emitted slot is a uniform zero-fill.
+RED_FIELDS = ("val", "cnt", "nlast", "txn", "ts", "src")
+NRED = len(RED_FIELDS)
+A_VAL, A_CNT, A_NLAST, A_TXN, A_TS, A_SRC = range(NRED)
+
 
 def empty_flits(shape) -> jnp.ndarray:
     """Zeroed packed flit array of shape [*shape, NF]."""
@@ -187,6 +202,167 @@ def arb_decisions(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
     return ArbDecisions(arb_pop, granted, chosen, rr, wh, in_space)
 
 
+def offload_decisions(in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
+                      depth_out: int, fork_out, red_parent, red_need,
+                      red_acc, red_got, n_endpoints: int,
+                      vc_out=None, n_vcs: int = 1):
+    """Arbitration with tree-multicast fork + in-fabric reduction ALU.
+
+    The ``collective_offload=True`` counterpart of ``arb_decisions`` (which
+    stays byte-for-byte untouched so the pinned default traces carry no
+    extra operands). Single-channel, rank-generic over the leading router
+    axis like every decision function here. Extra inputs:
+
+    * ``fork_out`` [R, G, P] bool — multicast tree out-slots per group: a
+      head with ``F_KIND == KIND_MC`` and ``F_DST == n_endpoints + g``
+      requests *every* marked slot and pops only when it wins all of them
+      in the same cycle (credit-checked on all branches before the pop;
+      wormhole locks are taken branch-wise so multi-beat bursts stay
+      atomic). A partial win cancels the won branches for this cycle —
+      round-robin pointers do not advance on cancelled ports, so the
+      multicast head keeps its claim and converges as contended branches
+      rotate toward it.
+    * ``red_parent`` [R, G] int32 / ``red_need`` [R, G] int32 — reduction
+      tree: the out-slot toward the root (ejection slot at the root's
+      router, -1 off-tree) and the number of distinct child slots that
+      must contribute per beat.
+    * ``red_acc`` [R, G, NRED] / ``red_got`` [R, G, P] — the ALU slot: a
+      ``KIND_RED`` head at an un-contributed child slot is consumed into
+      the accumulator (``val`` += F_META, ``cnt`` += 1, max-merged
+      metadata) when the slot can take it; once ``cnt == red_need`` the
+      combined flit is emitted into the parent out-slot (lowest group id
+      wins a shared port, reduction emission pre-empts normal arbitration
+      on that port) and the slot zero-clears, accepting the next beat the
+      same cycle — one beat per cycle per router of pipelined throughput,
+      store-and-forward per hop.
+
+    Returns ``(ArbDecisions, red_acc', red_got')``. The link/apply phases
+    consume the merged ``ArbDecisions`` unchanged, which is how the Pallas
+    backend mirrors the fork and reduce paths without touching its apply
+    kernel.
+    """
+    P = in_cnt.shape[-1]
+    Din = in_buf.shape[-2]
+    G = red_need.shape[-1]
+
+    h = heads(in_buf)  # [R, P, NF]
+    h_valid = in_cnt > 0
+    kind = h[..., F_KIND]
+    dst = h[..., F_DST]
+    is_mc = h_valid & (kind == KIND_MC)
+    is_red = h_valid & (kind == KIND_RED)
+    g_of = jnp.clip(dst - n_endpoints, 0, G - 1)  # [R, P]
+
+    # ---- reduction ALU (all decisions from the cycle-start snapshot) ----
+    on_tree = red_need > 0  # [R, G]
+    full = on_tree & (red_acc[..., A_CNT] >= red_need)
+    parent = jnp.clip(red_parent, 0, P - 1)  # [R, G]
+    parent_free = jnp.take_along_axis(out_cnt < depth_out, parent, axis=1)
+    parent_unlocked = jnp.take_along_axis(wh_lock, parent, axis=1) < 0
+    can_emit = full & (red_parent >= 0) & parent_free & parent_unlocked
+    emit_oh = (parent[..., None] == jnp.arange(P)) & can_emit[..., None]
+    emit_oh &= jnp.cumsum(emit_oh.astype(jnp.int32), axis=-2) == 1
+    emit_port = jnp.any(emit_oh, axis=-2)  # [R, P_out]
+    emitting = jnp.any(emit_oh, axis=-1)  # [R, G]
+    g_sel = jnp.argmax(emit_oh, axis=-2)  # [R, P_out]
+    acc_sel = jnp.take_along_axis(red_acc, g_sel[..., None], axis=1)
+    red_flit = pack_flit(  # stays group-addressed for the next hop
+        n_endpoints + g_sel, acc_sel[..., A_SRC], KIND_RED,
+        acc_sel[..., A_TXN], 1 - acc_sel[..., A_NLAST],
+        acc_sel[..., A_TS], acc_sel[..., A_VAL])
+
+    # consume RED heads whose group slot takes a contribution this cycle:
+    # not yet contributed to the current beat, and the slot is either not
+    # full or flushing its snapshot this same cycle (pipelined refill).
+    accept_g = on_tree & (~full | emitting)  # [R, G]
+    accept_at = jnp.take_along_axis(accept_g, g_of, axis=1)  # [R, P]
+    got_at = jnp.take_along_axis(red_got, g_of[:, None, :], axis=1)[:, 0]
+    red_pop = is_red & ~got_at & accept_at  # [R, P_in]
+
+    gmask = (red_pop[:, None, :]
+             & (g_of[:, None, :] == jnp.arange(G)[None, :, None]))  # [R, G, P]
+    base_acc = jnp.where(emitting[..., None], 0, red_acc)
+    base_got = jnp.where(emitting[..., None], False, red_got)
+    gm = gmask.astype(jnp.int32)
+
+    def _contrib(f, combine):
+        """Merge field ``f`` of this cycle's contributing heads per group."""
+        v = h[..., f][:, None, :]  # [R, 1, P]
+        if combine == "sum":
+            return (gm * v).sum(-1)
+        return jnp.where(gmask, v, 0).max(-1)
+
+    red_acc2 = jnp.stack([
+        base_acc[..., A_VAL] + _contrib(F_META, "sum"),
+        base_acc[..., A_CNT] + gm.sum(-1),
+        jnp.maximum(base_acc[..., A_NLAST],
+                    jnp.where(gmask, 1 - h[..., F_LAST][:, None, :], 0).max(-1)),
+        jnp.maximum(base_acc[..., A_TXN], _contrib(F_TXN, "max")),
+        jnp.maximum(base_acc[..., A_TS], _contrib(F_TS, "max")),
+        jnp.maximum(base_acc[..., A_SRC], _contrib(F_SRC, "max")),
+    ], axis=-1)
+    red_got2 = base_got | gmask
+
+    # ---- arbitration with multicast fork requests -----------------------
+    req_port = jnp.take_along_axis(
+        route, jnp.clip(dst, 0, n_endpoints - 1), axis=1)
+    if n_vcs > 1:
+        Pp = P // n_vcs
+        vout = jnp.take_along_axis(
+            vc_out, jnp.clip(req_port, 0, Pp - 1)[..., None], axis=-1)[..., 0]
+        req_port = req_port * n_vcs + vout
+    uni = h_valid & ~is_mc & ~is_red
+    req_port = jnp.where(uni, req_port, -1)
+
+    pout = jnp.arange(P)
+    pin = jnp.arange(P)[None, :, None]
+    fork_at = jnp.take_along_axis(fork_out, g_of[..., None], axis=1)
+    req = ((req_port[:, :, None] == pout[None, None, :])
+           | (is_mc[:, :, None] & fork_at))  # [R, P_in, P_out]
+    elig = req
+    locked = wh_lock[:, None, :]
+    elig &= (locked < 0) | (locked == pin)
+    elig &= (out_cnt < depth_out)[:, None, :]
+    elig &= ~emit_port[:, None, :]  # reduction emission owns the port
+
+    score = (pin - rr_ptr[:, None, :]) % P
+    score = jnp.where(elig, score, P + 1)
+    best = score[:, 0, :]
+    winner = jnp.zeros_like(best)
+    for i in range(1, P):
+        si = score[:, i, :]
+        better = si < best
+        best = jnp.where(better, si, best)
+        winner = jnp.where(better, i, winner)
+    granted0 = best <= P  # [R, P_out]
+    win_onehot = (winner[:, None, :] == pin) & granted0[:, None, :]
+
+    # a multicast head fires only when it wins EVERY requested branch
+    fire_mc = is_mc & jnp.any(req, axis=2) & ~jnp.any(req & ~win_onehot,
+                                                      axis=2)
+    pop_uni = jnp.any(win_onehot & uni[..., None], axis=2)
+    arb_pop = pop_uni | fire_mc | red_pop
+
+    # cancel grants whose winner is a multicast head that did not fire
+    w_is_mc = jnp.take_along_axis(is_mc, winner, axis=1)
+    w_fired = jnp.take_along_axis(fire_mc, winner, axis=1)
+    granted = granted0 & (~w_is_mc | w_fired)
+    chosen = jnp.take_along_axis(h, winner[:, :, None], axis=1)
+
+    rr = jnp.where(granted, (winner + 1) % P, rr_ptr)
+    is_tail = chosen[..., F_LAST] > 0
+    wh = jnp.where(granted & ~is_tail, winner, wh_lock)
+    wh = jnp.where(granted & is_tail, -1, wh)
+
+    # merge reduction emissions (their ports were excluded from arb)
+    granted_all = granted | emit_port
+    chosen_all = jnp.where(emit_port[..., None], red_flit, chosen)
+
+    in_space = (in_cnt - arb_pop.astype(jnp.int32)) < Din
+    return (ArbDecisions(arb_pop, granted_all, chosen_all, rr, wh, in_space),
+            red_acc2, red_got2)
+
+
 def link_inputs(out_heads_all, out_valid_all, link_src, in_space,
                 n_vcs: int = 1):
     """Link-traversal decisions for this router's *input* side.
@@ -330,6 +506,45 @@ def router_cycle_reference(in_buf, in_cnt, out_buf, out_cnt, rr_ptr, wh_lock,
     ep_flit = out_heads[er, ep_p]  # [E, NF]
     ep_valid = out_valid[er, ep_p] & ep_space
     return in2, in_cnt2, out2, out_cnt2, arb.rr_ptr, arb.wh_lock, ep_flit, ep_valid
+
+
+def router_cycle_offload_reference(in_buf, in_cnt, out_buf, out_cnt, rr_ptr,
+                                   wh_lock, red_acc, red_got, route, link_src,
+                                   link_dst, port_ep, ep_attach, fork_out,
+                                   red_parent, red_need, ep_space,
+                                   n_endpoints: int, fused: bool = False,
+                                   vc_out=None, n_vcs: int = 1):
+    """One cycle with collective offload enabled (single channel, reference).
+
+    Identical to ``router_cycle_reference`` except that arbitration runs
+    through ``offload_decisions`` (fork table + reduction ALU) and the
+    per-(router, group) reduction state rides along. Returns the
+    ``router_cycle_reference`` tuple extended with ``(red_acc', red_got')``.
+    The link-traversal and apply phases are byte-for-byte shared: the
+    offload path only changes *which* flits are popped and latched.
+    """
+    arb, red_acc2, red_got2 = offload_decisions(
+        in_buf, in_cnt, out_cnt, rr_ptr, wh_lock, route,
+        depth_out=out_buf.shape[-2], fork_out=fork_out,
+        red_parent=red_parent, red_need=red_need, red_acc=red_acc,
+        red_got=red_got, n_endpoints=n_endpoints, vc_out=vc_out, n_vcs=n_vcs)
+
+    out_heads = heads(out_buf)
+    out_valid = out_cnt > 0
+    up_head, link_accept = link_inputs(out_heads, out_valid, link_src,
+                                       arb.in_space, n_vcs=n_vcs)
+    sent = sent_mask(out_valid, link_dst, port_ep, arb.in_space, ep_space,
+                     n_vcs=n_vcs)
+
+    in2, in_cnt2, out2, out_cnt2 = apply_cycle(
+        in_buf, in_cnt, out_buf, out_cnt, arb.arb_pop, arb.granted, arb.chosen,
+        link_accept, up_head, sent, fused=fused)
+
+    er, ep_p = ep_attach[:, 0], ep_attach[:, 1]
+    ep_flit = out_heads[er, ep_p]  # [E, NF]
+    ep_valid = out_valid[er, ep_p] & ep_space
+    return (in2, in_cnt2, out2, out_cnt2, arb.rr_ptr, arb.wh_lock,
+            ep_flit, ep_valid, red_acc2, red_got2)
 
 
 def inject_endpoints(in_buf, in_cnt, er, ep_p, port_ep, flit, want):

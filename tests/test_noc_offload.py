@@ -1,0 +1,198 @@
+"""In-network collective offload: exactly-once delivery, reduction-sum
+correctness, cross-backend/cross-impl SimState equivalence, the
+``collective_offload=False`` golden pin, and the analytical-twin
+tolerance (<=10%) for the offloaded schedules."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.noc import collective_traffic as CT
+from repro.core.noc import endpoints as epm
+from repro.core.noc import sim as S
+from repro.core.noc import topology as T
+from repro.core.noc.params import (
+    CH_WIDE, KIND_CHANNEL, WIDE_MC, WIDE_RED, NocParams)
+from repro.kernels.noc_router import ref
+
+from test_noc_channels import GOLDEN, _golden_sim
+
+
+def _run_sched(topo, sc, params, slack=500):
+    """Build + run an (optionally offloaded) schedule; return (sim, stats,
+    schedule, measured, model_estimate)."""
+    est = CT.analytical_cycles(sc, params, topo)
+    sim = S.build_sim(topo, params, CT.to_workload(topo, sc),
+                      groups=sc.meta.get("groups"))
+    st = S.run(sim, int(est * 1.5) + slack)
+    out = S.stats(sim, st)
+    return sim, out, st, CT.measured_cycles(out, topo), est
+
+
+# ----------------------------------------------------------------------
+# exactly-once delivery + reduction-sum correctness
+# ----------------------------------------------------------------------
+def test_offloaded_multicast_exactly_once():
+    """Tree multicast delivers every member exactly one burst of exactly
+    ``beats`` beats — no duplicate forks, no missing branches."""
+    topo = T.build_mesh(4, 4, hbm_west=False)
+    sc = CT.multicast(topo, data_kb=4, offload=True)
+    params = NocParams(collective_offload=True)
+    _, out, _, _, _ = _run_sched(topo, sc, params)
+    np.testing.assert_array_equal(out["rx_bursts"], sc.expect_rx)
+    beats = sc.meta["beats"]
+    want = np.zeros(topo.n_endpoints, np.int64)
+    want[1:topo.meta["n_tiles"]] = beats  # every member but the root
+    np.testing.assert_array_equal(out["beats_rcvd"], want)
+
+
+def test_offloaded_all_reduce_exactly_once():
+    """In-fabric all-reduce: the root receives exactly one combined burst
+    per stream (the ALU merges the partials) and every contributor gets
+    exactly one broadcast burst back."""
+    topo = T.build_mesh(4, 4, hbm_west=False)
+    sc = CT.all_reduce(topo, data_kb=1, streams=4, algo="infabric")
+    params = NocParams(collective_offload=True)
+    _, out, _, _, _ = _run_sched(topo, sc, params)
+    np.testing.assert_array_equal(out["rx_bursts"], sc.expect_rx)
+    assert (out["rx_bursts"][:topo.meta["n_tiles"]] == 1).all()
+
+
+def test_reduction_sum_correctness():
+    """The combined flits arriving at the root carry the arithmetic sum of
+    every contributor's F_META payload, with the last-flag only on the
+    final beat (stepped cycle-by-cycle to observe the delivered flits)."""
+    topo = T.build_mesh(3, 3, hbm_west=False)
+    E = topo.n_endpoints
+    beats = 4
+    params = NocParams(collective_offload=True)
+    groups = [{"root": 0, "members": list(range(E)),
+               "reduce": list(range(1, E))}]
+    wl = epm.idle_workload(E, E, streams=1)
+    dst = np.full((E, 1, 2), -1, np.int32)
+    for e in range(1, E):
+        dst[e, 0, 0] = E + 1 + 0  # reduction contribution to group 0
+    wl = dataclasses.replace(
+        wl, dma_dst_seq=dst, dma_gate=np.zeros((E, 1, 2), np.int32),
+        dma_beats_seq=np.full((E, 1, 2), beats, np.int32),
+        dma_txns=(dst[:, :, 0] >= 0).astype(np.int32), dma_write=True,
+        n_groups=1)
+    sim = S.build_sim(topo, params, wl, groups=groups)
+    st = sim.init_state()
+    got = []  # (meta, last) of every WIDE_RED flit delivered at the root
+    for _ in range(120):
+        st, (flit, valid) = sim.step(st)
+        f, v = np.asarray(flit), np.asarray(valid)
+        for c in range(f.shape[0]):
+            if v[c, 0] and f[c, 0, ref.F_KIND] == WIDE_RED:
+                got.append((int(f[c, 0, ref.F_META]),
+                            int(f[c, 0, ref.F_LAST])))
+    # pack_flit stores the burst length in F_META, so each contributor's
+    # beat carries `beats`; the ALU sum over the 8 contributors is 8*beats
+    assert [m for m, _ in got] == [(E - 1) * beats] * beats
+    assert [l for _, l in got] == [0] * (beats - 1) + [1]
+    assert int(np.asarray(st.eps.rx_bursts)[0, 0]) == 1  # exactly once
+
+
+# ----------------------------------------------------------------------
+# backend / step-impl equivalence with offload enabled
+# ----------------------------------------------------------------------
+def _equiv_cases():
+    return [
+        ("mesh", T.build_mesh(3, 3, hbm_west=False), 1),
+        ("torus_v2", T.build_torus(3, 3), 2),
+        ("multi_die", T.build_multi_die(2, nx=2, ny=2, d2d=2), 1),
+    ]
+
+
+@pytest.mark.parametrize("name,topo,n_vcs", _equiv_cases(),
+                         ids=[c[0] for c in _equiv_cases()])
+def test_offload_backend_and_impl_equivalence(name, topo, n_vcs):
+    """jnp/pallas x fast/naive agree on the full canonical SimState (and
+    stats) for an offloaded in-fabric all-reduce on every topology class."""
+    sc = CT.all_reduce(topo, data_kb=1, streams=2, algo="infabric")
+    wl = CT.to_workload(topo, sc)
+    groups = sc.meta["groups"]
+    combos = [("fast", "jnp"), ("naive", "jnp"),
+              ("fast", "pallas"), ("naive", "pallas")]
+    canon, outs = {}, {}
+    for impl, backend in combos:
+        params = NocParams(collective_offload=True, step_impl=impl,
+                           backend=backend, n_vcs=n_vcs)
+        sim = S.build_sim(topo, params, wl, groups=groups)
+        st = S.run(sim, 160)
+        canon[(impl, backend)] = S.canonical_state(sim, st, scrub=True)
+        outs[(impl, backend)] = S.stats(sim, st)
+    ref_key = combos[0]
+    import jax
+
+    for key in combos[1:]:
+        for a, b in zip(jax.tree.leaves(canon[ref_key]),
+                        jax.tree.leaves(canon[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(outs[ref_key]["rx_bursts"],
+                                      outs[key]["rx_bursts"])
+        np.testing.assert_array_equal(outs[ref_key]["beats_rcvd"],
+                                      outs[key]["beats_rcvd"])
+
+
+# ----------------------------------------------------------------------
+# offload=False stays bit-identical to the seed fabric
+# ----------------------------------------------------------------------
+def test_offload_false_matches_seed_golden_pins():
+    """``collective_offload=False`` (the default) reproduces the seed-commit
+    golden stats bit-for-bit: the offload tables/state are never
+    materialized and the datapath is untouched."""
+    sim = _golden_sim()
+    assert sim.params.collective_offload is False
+    st = S.run(sim, 1200)
+    out = S.stats(sim, st)
+    np.testing.assert_array_equal(out["beats_rcvd"], GOLDEN["beats_rcvd"])
+    np.testing.assert_array_equal(out["dma_done"].sum(axis=-1),
+                                  GOLDEN["dma_done"])
+    np.testing.assert_array_equal(out["ni_stalls"], GOLDEN["ni_stalls"])
+    np.testing.assert_array_equal(out["last_rx"], GOLDEN["last_rx"])
+    np.testing.assert_array_equal(out["first_rx"], GOLDEN["first_rx"])
+
+
+def test_groups_require_offload_knob():
+    """build_sim refuses groups without NocParams(collective_offload=True),
+    and a workload group count that disagrees with the group table."""
+    topo = T.build_mesh(3, 3, hbm_west=False)
+    sc = CT.multicast(topo, data_kb=1, offload=True)
+    wl = CT.to_workload(topo, sc)
+    with pytest.raises(ValueError, match="collective_offload"):
+        S.build_sim(topo, NocParams(), wl, groups=sc.meta["groups"])
+    with pytest.raises(ValueError, match="group"):
+        S.build_sim(topo, NocParams(collective_offload=True), wl, groups=[])
+
+
+def test_kind_constants_paired_across_packages():
+    """The kernel package's kind constants mirror the simulator's, and both
+    offload kinds ride a wide channel."""
+    assert ref.KIND_MC == WIDE_MC
+    assert ref.KIND_RED == WIDE_RED
+    assert KIND_CHANNEL[WIDE_MC] == CH_WIDE
+    assert KIND_CHANNEL[WIDE_RED] == CH_WIDE
+
+
+# ----------------------------------------------------------------------
+# analytical twins (<=10%)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("build,streams", [
+    (lambda t: CT.multicast(t, data_kb=4, offload=True), 1),
+    (lambda t: CT.multicast(t, data_kb=4, streams=4, offload=True), 4),
+    (lambda t: CT.all_reduce(t, data_kb=1, streams=1, algo="infabric"), 1),
+    (lambda t: CT.all_reduce(t, data_kb=1, streams=4, algo="infabric"), 4),
+])
+@pytest.mark.parametrize("topo_name", ["mesh", "torus"])
+def test_offload_analytical_twin_within_10pct(build, streams, topo_name):
+    """FabricCollectiveModel tracks the offloaded schedules to <=10%."""
+    topo = (T.build_mesh(4, 4, hbm_west=False) if topo_name == "mesh"
+            else T.build_torus(4, 4))
+    params = NocParams(collective_offload=True,
+                       n_vcs=2 if topo_name == "torus" else 1)
+    sc = build(topo)
+    _, out, _, meas, est = _run_sched(topo, sc, params)
+    np.testing.assert_array_equal(out["rx_bursts"], sc.expect_rx)
+    assert abs(meas - est) / meas <= 0.10, (meas, est)

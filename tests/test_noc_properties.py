@@ -1,0 +1,259 @@
+"""Property-based differential fabric harness.
+
+Random small fabrics (topology x n_channels x n_vcs x backend) run random
+multi-stream DMA-write workloads and must uphold, on every sample:
+
+* **flit conservation / exactly-once** — after drain, every (endpoint,
+  stream) received exactly the beats and bursts the workload sent it, and
+  every issued burst retired (``d_done == dma_txns``);
+* **no queue overwrite** — every FIFO/queue counter stays inside its
+  configured capacity (input FIFOs, output buffers, egress queues, memory
+  queue) at the sampled mid-point and at the end;
+* **canonical-state backend equality** — the fast and naive step paths
+  (and the Pallas backend in the deep profile) agree on the scrubbed
+  canonical ``SimState``, not just on summary stats;
+* **monotone credit accounting** — delivered-beat/burst/retire counters
+  never decrease between the mid-point and the end of the run.
+
+The harness drives through ``hypothesis`` when it is installed (the CI
+``[test]`` extra); otherwise it falls back to a deterministic seeded
+sweep of the same generator so the invariants stay exercised in minimal
+environments. The fast profile is derandomized and small; the ``slow``
+marker runs the deep profile (more examples + the Pallas backend).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.noc import endpoints as epm
+from repro.core.noc import sim as S
+from repro.core.noc import topology as T
+from repro.core.noc.params import NocParams
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hst
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container without the [test] extra
+    HAVE_HYPOTHESIS = False
+
+
+# ----------------------------------------------------------------------
+# generators
+# ----------------------------------------------------------------------
+def _random_workload(topo, streams, rng):
+    """Random multi-stream DMA-write workload: every tile issues 0..2
+    bursts of 1..4 beats per stream to distinct random tiles (no gates,
+    so the schedule is deadlock-free by construction)."""
+    E = topo.n_endpoints
+    nt = topo.meta["n_tiles"]
+    K = 2
+    dst = np.full((E, streams, K), -1, np.int32)
+    bts = np.zeros((E, streams, K), np.int32)
+    txns = np.zeros((E, streams), np.int32)
+    for e in range(nt):
+        for s in range(streams):
+            txns[e, s] = int(rng.integers(0, 3))
+            for k in range(K):
+                d = int(rng.integers(0, nt - 1))
+                dst[e, s, k] = d + (d >= e)  # anything but self
+                bts[e, s, k] = int(rng.integers(1, 5))
+    wl = epm.idle_workload(E, nt, streams=streams)
+    return dataclasses.replace(
+        wl, dma_dst_seq=dst, dma_gate=np.zeros_like(dst),
+        dma_beats_seq=bts, dma_txns=txns, dma_write=True)
+
+
+def _expected_rx(wl):
+    """Replay the workload: expected (beats, bursts) per (endpoint, stream)."""
+    E, streams, K = wl.dma_dst_seq.shape
+    beats = np.zeros((E, streams), np.int64)
+    bursts = np.zeros((E, streams), np.int64)
+    for e in range(E):
+        for s in range(streams):
+            for t in range(int(wl.dma_txns[e, s])):
+                k = t % K
+                d = int(wl.dma_dst_seq[e, s, k])
+                beats[d, s] += int(wl.dma_beats_seq[e, s, k])
+                bursts[d, s] += 1
+    return beats, bursts
+
+
+def _counter_bounds_ok(sim, st):
+    """Every queue counter within [0, capacity] — an overwrite or a lost
+    credit would push one outside."""
+    p = sim.params
+    checks = [
+        (st.fabric.in_cnt, p.depth_in),
+        (st.fabric.out_cnt, p.depth_out),
+        (st.eps.eg_cnt, p.egress_depth),
+        (st.eps.mq_cnt, p.memq_depth),
+    ]
+    for arr, cap in checks:
+        a = np.asarray(arr)
+        assert a.min() >= 0 and a.max() <= cap, (a.min(), a.max(), cap)
+
+
+def _run_case(topo_kind, nx, ny, n_channels, streams, seed, backend="jnp"):
+    """Build one random fabric + workload and check every invariant."""
+    rng = np.random.default_rng(seed)
+    if topo_kind == "torus":
+        topo, n_vcs = T.build_torus(nx, ny), 2  # random pairs need datelines
+    else:
+        topo = T.build_mesh(nx, ny, hbm_west=False)
+        n_vcs = int(rng.integers(1, 3))
+    wl = _random_workload(topo, streams, rng)
+    exp_beats, exp_bursts = _expected_rx(wl)
+    total_beats = int(exp_beats.sum())
+    t_end = 400 + 8 * total_beats
+    t_mid = t_end // 2
+
+    params = NocParams(step_impl="fast", backend=backend,
+                       n_channels=n_channels, n_vcs=n_vcs)
+    sim = S.build_sim(topo, params, wl)
+    mid = S.run(sim, t_mid)
+    mid_counts = {k: np.asarray(v).copy() for k, v in (
+        ("beats_rcvd", mid.eps.beats_rcvd), ("rx_bursts", mid.eps.rx_bursts),
+        ("d_done", mid.eps.d_done))}
+    _counter_bounds_ok(sim, mid)
+    st = S.run(sim, t_end - t_mid, state=mid)
+    _counter_bounds_ok(sim, st)
+
+    # monotone credit/delivery accounting
+    for key, arr in (("beats_rcvd", st.eps.beats_rcvd),
+                     ("rx_bursts", st.eps.rx_bursts),
+                     ("d_done", st.eps.d_done)):
+        assert (np.asarray(arr) >= mid_counts[key]).all(), key
+
+    # flit conservation + exactly-once delivery + every burst retired
+    np.testing.assert_array_equal(np.asarray(st.eps.beats_rcvd),
+                                  exp_beats.sum(axis=1))
+    np.testing.assert_array_equal(np.asarray(st.eps.rx_bursts), exp_bursts)
+    np.testing.assert_array_equal(np.asarray(st.eps.d_done), wl.dma_txns)
+
+    # differential: the naive reference impl reaches the same canonical
+    # state (scrubbed, so stale dead-slot scratch can't mask a divergence)
+    simn = S.build_sim(topo, dataclasses.replace(params, step_impl="naive"),
+                       wl)
+    stn = S.run(simn, t_end)
+    a = S.canonical_state(sim, st, scrub=True)
+    b = S.canonical_state(simn, stn, scrub=True)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ----------------------------------------------------------------------
+# fast profile (tier-1): derandomized, jnp backend
+# ----------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(topo_kind=hst.sampled_from(["mesh", "torus"]),
+           nx=hst.integers(2, 3), ny=hst.integers(2, 3),
+           n_channels=hst.sampled_from([3, 4]),
+           streams=hst.integers(1, 2),
+           seed=hst.integers(0, 2**16))
+    def test_fabric_invariants_random(topo_kind, nx, ny, n_channels,
+                                      streams, seed):
+        _run_case(topo_kind, nx, ny, n_channels, streams, seed)
+
+else:
+
+    @pytest.mark.parametrize("i", range(8))
+    def test_fabric_invariants_random(i):
+        rng = np.random.default_rng(1000 + i)
+        _run_case(topo_kind=("mesh", "torus")[i % 2],
+                  nx=int(rng.integers(2, 4)), ny=int(rng.integers(2, 4)),
+                  n_channels=int(rng.choice([3, 4])),
+                  streams=int(rng.integers(1, 3)),
+                  seed=int(rng.integers(0, 2**16)))
+
+
+# ----------------------------------------------------------------------
+# deep profile (-m slow): more examples + the Pallas backend
+# ----------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.slow
+    @settings(max_examples=24, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(topo_kind=hst.sampled_from(["mesh", "torus"]),
+           nx=hst.integers(2, 4), ny=hst.integers(2, 4),
+           n_channels=hst.sampled_from([3, 4, 5]),
+           streams=hst.integers(1, 3),
+           seed=hst.integers(0, 2**16))
+    def test_fabric_invariants_random_deep(topo_kind, nx, ny, n_channels,
+                                           streams, seed):
+        _run_case(topo_kind, nx, ny, n_channels, streams, seed)
+
+else:
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("i", range(16))
+    def test_fabric_invariants_random_deep(i):
+        rng = np.random.default_rng(7000 + i)
+        _run_case(topo_kind=("mesh", "torus")[i % 2],
+                  nx=int(rng.integers(2, 5)), ny=int(rng.integers(2, 5)),
+                  n_channels=int(rng.choice([3, 4, 5])),
+                  streams=int(rng.integers(1, 4)),
+                  seed=int(rng.integers(0, 2**16)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("i", range(2))
+def test_fabric_invariants_pallas_backend(i):
+    """Deep profile: the differential harness on the Pallas backend
+    (interpret mode is slow, so only a couple of samples)."""
+    rng = np.random.default_rng(31000 + i)
+    _run_case(topo_kind=("mesh", "torus")[i % 2], nx=2, ny=3,
+              n_channels=3, streams=int(rng.integers(1, 3)),
+              seed=int(rng.integers(0, 2**16)), backend="pallas")
+
+
+# ----------------------------------------------------------------------
+# canonical_state scrub: the PR-6 dead-slot garbage fix
+# ----------------------------------------------------------------------
+def test_canonical_scrub_masks_dead_slot_garbage():
+    """Regression for the dead-slot garbage documented in PR 6: two states
+    that agree on every *live* value but differ in idle scratch (memory
+    responder template of an inactive slot, write-serializer registers of
+    an idle stream, NI destination cache of a drained TxnID) compared
+    UNEQUAL under the plain canonicalization — so an equality pin could
+    only pass if the garbage happened to match, and a comparison could
+    fail (or pass) by accident on stale tail flits. ``scrub=True`` masks
+    exactly the dead slots, restoring live-value semantics; the property
+    harness above always compares scrubbed states."""
+    topo = T.build_mesh(3, 3, hbm_west=False)
+    wl = _random_workload(topo, 2, np.random.default_rng(5))
+    sim = S.build_sim(topo, NocParams(), wl)
+    st = S.run(sim, 600)  # quiesced: serializers idle, no memory bursts
+
+    eps = st.eps
+    m_dead = ~np.asarray(eps.m_active)
+    w_dead = np.asarray(eps.w_stream) < 0
+    ni_dead = np.asarray(eps.ni_cnt) == 0
+    assert m_dead.any() and w_dead.any() and ni_dead.any()
+    eps2 = dataclasses.replace(
+        eps,
+        m_flit=eps.m_flit + 7 * m_dead[:, None].astype(np.int32),
+        w_dst=eps.w_dst + 5 * w_dead.astype(np.int32),
+        ni_dst=np.where(ni_dead, 123, np.asarray(eps.ni_dst)),
+    )
+    st2 = dataclasses.replace(st, eps=eps2)
+
+    plain1 = S.canonical_state(sim, st)
+    plain2 = S.canonical_state(sim, st2)
+    differs = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(plain1), jax.tree.leaves(plain2)))
+    assert differs, "dead-slot garbage should leak through plain comparison"
+
+    s1 = S.canonical_state(sim, st, scrub=True)
+    s2 = S.canonical_state(sim, st2, scrub=True)
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
